@@ -1,0 +1,208 @@
+"""Benchmark harness — one entry per paper table/figure + framework benches.
+
+Emits ``name,us_per_call,derived`` CSV rows.  Experiment-derived rows read
+the JSON artifacts produced by the example drivers (results/*.json); compute
+benches time the hot paths on this host.
+
+  PYTHONPATH=src python -m benchmarks.run [--filter substr]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS = os.environ.get("REPRO_RESULTS", "results")
+ROWS: list[tuple[str, float, str]] = []
+
+
+def row(name: str, us: float, derived: str = "") -> None:
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.2f},{derived}", flush=True)
+
+
+def _timeit(fn, *args, reps=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+# ---------------------------------------------------------------------------
+# Table: sampler solver scaling (paper Appendix G — O(N log N) claim)
+# ---------------------------------------------------------------------------
+
+
+def bench_solver_scaling() -> None:
+    from repro.core import solver
+
+    for n in (1_000, 10_000, 100_000, 1_000_000):
+        a = jax.random.uniform(jax.random.PRNGKey(0), (n,)) + 1e-3
+        f = jax.jit(lambda a, n=n: solver.isp_probabilities(a, n // 10))
+        us = _timeit(f, a)
+        row(f"kvib_solver_n{n}", us, f"probabilities for N={n} clients")
+
+
+# ---------------------------------------------------------------------------
+# Table: server aggregation (fused kernel vs two-pass reference)
+# ---------------------------------------------------------------------------
+
+
+def bench_fused_aggregation() -> None:
+    from repro.kernels import ref
+    from repro.kernels.fused_weighted_agg import fused_weighted_agg
+
+    c, d = 16, 1 << 20
+    g = jax.random.normal(jax.random.PRNGKey(0), (c, d), jnp.float32)
+    w = jax.random.uniform(jax.random.PRNGKey(1), (c,))
+
+    us_ref = _timeit(jax.jit(ref.weighted_agg_reference), g, w, reps=5)
+    row("weighted_agg_reference", us_ref, f"two-output jnp path C={c} D={d}")
+    us_k = _timeit(
+        lambda g, w: fused_weighted_agg(g, w, block_d=4096, interpret=True), g, w,
+        reps=1, warmup=1,
+    )
+    row("fused_weighted_agg_interp", us_k, "Pallas kernel (interpret mode; TPU target)")
+
+
+# ---------------------------------------------------------------------------
+# Table: federated round step (paper's Algorithm 1 at simulation scale)
+# ---------------------------------------------------------------------------
+
+
+def bench_round_step() -> None:
+    from repro.configs import get_config
+    from repro.fed.round import RoundSpec, build_round_step
+    from repro.models import transformer
+
+    cfg = get_config("smollm-360m").reduced(n_layers=2, d_model=128, d_ff=256, vocab=256)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    c, r, b, s = 4, 2, 2, 64
+    tok = jax.random.randint(jax.random.PRNGKey(1), (c, r, b, s), 0, cfg.vocab)
+    w = jnp.full((c,), 0.25)
+    step = jax.jit(build_round_step(cfg, RoundSpec(cohort=c, local_steps=r, local_lr=0.05)))
+    us = _timeit(step, params, tok, tok, w, reps=3)
+    tokens = c * r * b * s
+    row("fl_round_step_reduced", us, f"{tokens} tokens/round client_parallel")
+
+
+# ---------------------------------------------------------------------------
+# Paper figures from experiment artifacts
+# ---------------------------------------------------------------------------
+
+
+def table_synthetic() -> None:
+    path = os.path.join(RESULTS, "synthetic.json")
+    if not os.path.exists(path):
+        row("fig2_synthetic", 0, "MISSING - run examples/synthetic_regret.py")
+        return
+    data = json.load(open(path))
+    t = data["config"]["rounds"]
+    for name, runs in data["runs"].items():
+        if name == "kvib_gamma":
+            continue
+        reg = np.mean([r["regret"][-1] / t for r in runs])
+        err = np.mean([np.mean(r["sq_error"][t // 3 :]) for r in runs])
+        row(f"fig2_regretT_{name}", 0, f"dynamic regret/T={reg:.5f} est.var={err:.6f}")
+
+
+def table_budget() -> None:
+    path = os.path.join(RESULTS, "budget.json")
+    if not os.path.exists(path):
+        row("fig3b_budget", 0, "MISSING - run examples/budget_sweep.py")
+        return
+    data = json.load(open(path))
+    for name, by_k in data["regret_per_round"].items():
+        ks = sorted(by_k, key=int)
+        speedup = by_k[ks[0]] / max(by_k[ks[-1]], 1e-9)
+        row(
+            f"fig3b_{name}",
+            0,
+            f"regret/T K={ks[0]}:{by_k[ks[0]]:.4f} -> K={ks[-1]}:{by_k[ks[-1]]:.4f} ({speedup:.0f}x)",
+        )
+
+
+def table_femnist() -> None:
+    path = os.path.join(RESULTS, "femnist.json")
+    if not os.path.exists(path):
+        row("fig4_femnist", 0, "MISSING - run examples/femnist_style.py")
+        return
+    data = json.load(open(path))
+    for level, lv in data["levels"].items():
+        for name, run in lv["samplers"].items():
+            tta = run.get("rounds_to_target")
+            row(
+                f"fig4_{level}_{name}",
+                0,
+                f"acc={run['acc'][-1]:.3f} t@target={tta} est.var={np.mean(run['sq_error']):.5f}",
+            )
+
+
+def table_fed_lm() -> None:
+    path = os.path.join(RESULTS, "fed_lm.json")
+    if not os.path.exists(path):
+        row("fig5_fed_lm", 0, "MISSING - run examples/fed_lm.py")
+        return
+    data = json.load(open(path))
+    for name, run in data["runs"].items():
+        row(f"fig5_lm_{name}", 0, f"loss {run['loss'][0]:.3f}->{run['loss'][-1]:.3f}")
+
+
+def table_roofline() -> None:
+    from repro.analysis.roofline import HW
+
+    ddir = os.path.join(RESULTS, "dryrun")
+    if not os.path.isdir(ddir):
+        row("roofline", 0, "MISSING - run python -m repro.launch.dryrun --all")
+        return
+    hw = HW()
+    for f in sorted(os.listdir(ddir)):
+        if not f.endswith(".json"):
+            continue
+        r = json.load(open(os.path.join(ddir, f)))
+        if r.get("status") != "ok" or r.get("multi_pod"):
+            continue
+        comp = r["flops"] / hw.peak_flops
+        mem = r["bytes_accessed"] / hw.hbm_bw
+        coll = r["collective_bytes"] / hw.ici_bw
+        dom = max((comp, "compute"), (mem, "memory"), (coll, "collective"))[1]
+        row(
+            f"roofline_{r['arch']}_{r['shape']}",
+            0,
+            f"compute={comp:.3f}s memory={mem:.3f}s collective={coll:.3f}s dominant={dom}",
+        )
+
+
+BENCHES = {
+    "solver": bench_solver_scaling,
+    "fused_agg": bench_fused_aggregation,
+    "round_step": bench_round_step,
+    "fig2": table_synthetic,
+    "fig3b": table_budget,
+    "fig4": table_femnist,
+    "fig5": table_fed_lm,
+    "roofline": table_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--filter", default="")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES.items():
+        if args.filter and args.filter not in name:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.analysis.hlo import analyze_hlo
+from repro.analysis.roofline import HW, RooflineTerms, model_flops, roofline
+
+__all__ = ["analyze_hlo", "HW", "RooflineTerms", "model_flops", "roofline"]

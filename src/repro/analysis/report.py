@@ -1,0 +1,143 @@
+"""Assemble EXPERIMENTS.md roofline/dry-run tables from results/dryrun/*.json.
+
+  PYTHONPATH=src python -m repro.analysis.report [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.analysis.roofline import HW, roofline
+
+__all__ = ["load_results", "roofline_table", "dryrun_table"]
+
+
+def load_results(ddir: str) -> list[dict]:
+    out = []
+    for f in sorted(os.listdir(ddir)):
+        if f.endswith(".json"):
+            out.append(json.load(open(os.path.join(ddir, f))))
+    return out
+
+
+def _fmt_seconds(x: float) -> str:
+    if x >= 100:
+        return f"{x:.0f}"
+    if x >= 1:
+        return f"{x:.2f}"
+    return f"{x:.4f}"
+
+
+def _fmt_bytes(x: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(x) < 1024 or unit == "TB":
+            return f"{x:.1f}{unit}"
+        x /= 1024
+    return f"{x:.1f}TB"
+
+
+def roofline_table(results: list[dict], hw: HW = HW()) -> str:
+    """Single-pod roofline table (EXPERIMENTS.md section Roofline)."""
+    lines = [
+        "| arch | shape | kind | compute s | memory s | collective s | dominant | "
+        "flops/dev | HBM/dev | coll/dev | 6ND/HLO |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        if r.get("status") != "ok" or r.get("multi_pod"):
+            continue
+        t = roofline(
+            r["flops"], r["bytes_accessed"], r["collective_bytes"],
+            r["n_chips"], r["model_flops"], hw,
+        )
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {_fmt_seconds(t.compute_s)} | {_fmt_seconds(t.memory_s)} "
+            f"| {_fmt_seconds(t.collective_s)} | **{t.dominant}** "
+            f"| {r['flops']:.2e} | {_fmt_bytes(r['bytes_accessed'])} "
+            f"| {_fmt_bytes(r['collective_bytes'])} | {t.useful_ratio:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def dryrun_table(results: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | status | kind | mode | bytes/dev (args+tmp) | compile s |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        mesh = "2x16x16" if r.get("multi_pod") else "16x16"
+        if r.get("status") == "ok":
+            mem = r["memory"]
+            per_dev = mem["argument_size_bytes"] + mem["temp_size_bytes"]
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | ok | {r['kind']} "
+                f"| {r['round_mode'] if r['kind']=='train' else '-'} "
+                f"| {_fmt_bytes(per_dev)} | {r['compile_s']} |"
+            )
+        else:
+            reason = r.get("reason", r.get("status"))
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | {r['status']} | - | - | {reason} | - |"
+            )
+    return "\n".join(lines)
+
+
+def summarize(results):
+    ok = sum(1 for r in results if r.get("status") == "ok")
+    skip = sum(1 for r in results if r.get("status") == "skip")
+    bad = [r for r in results if r.get("status") not in ("ok", "skip")]
+    return ok, skip, bad
+
+
+def perf_table(perf_dir: str, hw: HW = HW()) -> str:
+    """Optimized-variant measurements (EXPERIMENTS.md section Perf)."""
+    if not os.path.isdir(perf_dir):
+        return "(no results/perf directory)"
+    lines = [
+        "| variant | opts | compute s | memory s | collective s | dominant |",
+        "|---|---|---|---|---|---|",
+    ]
+    for f in sorted(os.listdir(perf_dir)):
+        if not f.endswith(".json"):
+            continue
+        path = os.path.join(perf_dir, f)
+        if os.path.getsize(path) == 0:
+            continue
+        r = json.load(open(path))
+        if r.get("status") != "ok":
+            continue
+        t = roofline(
+            r["flops"], r["bytes_accessed"], r["collective_bytes"],
+            r["n_chips"], r["model_flops"], hw,
+        )
+        lines.append(
+            f"| {f[:-5]} | {','.join(r.get('opts', [])) or 'baseline'} "
+            f"| {_fmt_seconds(t.compute_s)} | {_fmt_seconds(t.memory_s)} "
+            f"| {_fmt_seconds(t.collective_s)} | **{t.dominant}** |"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--perf-dir", default="results/perf")
+    args = ap.parse_args()
+    results = load_results(args.dir)
+    ok, skip, bad = summarize(results)
+    print(f"## Dry-run ({ok} ok, {skip} skip, {len(bad)} failed)\n")
+    print(dryrun_table(results))
+    print("\n## Roofline (single-pod 16x16, per-round)\n")
+    print(roofline_table(results))
+    print("\n## Perf variants (hillclimbed pairs + generalization probes)\n")
+    print(perf_table(args.perf_dir))
+    if bad:
+        print("\nFAILED COMBOS:")
+        for r in bad:
+            print(" -", r["arch"], r["shape"], "mp" if r.get("multi_pod") else "sp", r.get("status"))
+
+
+if __name__ == "__main__":
+    main()

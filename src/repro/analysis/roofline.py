@@ -1,0 +1,104 @@
+"""Three-term roofline model from compiled dry-run artifacts (TPU v5e).
+
+  compute    = HLO_FLOPs    / (chips x 197e12 FLOP/s bf16)
+  memory     = HLO_bytes    / (chips x 819e9  B/s HBM)
+  collective = coll_bytes   / (chips x 50e9   B/s per ICI link)
+
+``compiled.cost_analysis()`` reports the post-SPMD per-device module; we
+normalize everything to PER-DEVICE quantities (flops/bytes from
+cost_analysis are already per-device; collective bytes parsed from the
+per-device HLO likewise), so the formulas divide by ONE chip's peak.
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D uses only *active* params for
+MoE; the ratio MODEL_FLOPS / (HLO_FLOPs x chips) exposes remat/redundancy
+waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["HW", "RooflineTerms", "roofline", "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12  # bf16 per chip
+    hbm_bw: float = 819e9  # B/s per chip
+    ici_bw: float = 50e9  # B/s per link
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops_total: float
+    useful_ratio: float  # MODEL_FLOPS / (HLO flops x chips)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["dominant"] = self.dominant
+        return d
+
+
+def roofline(
+    flops_per_device: float,
+    bytes_per_device: float,
+    coll_bytes_per_device: float,
+    n_chips: int,
+    model_flops_total: float,
+    hw: HW = HW(),
+) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops_per_device / hw.peak_flops,
+        memory_s=bytes_per_device / hw.hbm_bw,
+        collective_s=coll_bytes_per_device / hw.ici_bw,
+        flops_per_device=flops_per_device,
+        bytes_per_device=bytes_per_device,
+        coll_bytes_per_device=coll_bytes_per_device,
+        model_flops_total=model_flops_total,
+        useful_ratio=(
+            model_flops_total / (flops_per_device * n_chips)
+            if flops_per_device
+            else 0.0
+        ),
+    )
+
+
+def active_params(cfg, param_shapes) -> float:
+    """Active parameter count, exactly from the parameter tree: every leaf
+    counts fully except MoE expert stacks, which count scaled by top_k/E."""
+    import jax
+
+    expert_names = {"w_gate", "w_up", "w_down"}
+    total = 0.0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(param_shapes):
+        name = ""
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        size = 1
+        for s in leaf.shape:
+            size *= int(s)
+        if name in expert_names and cfg.n_experts:
+            size *= cfg.top_k / cfg.n_experts
+        total += size
+    return total
+
+
+def model_flops(n_active: float, tokens_processed: float, kind: str) -> float:
+    """6·N_active·D for training, 2·N_active·D for inference forward."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens_processed

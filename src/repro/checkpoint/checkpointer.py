@@ -1,0 +1,56 @@
+"""Minimal dependency-free checkpointing: pytrees -> flat npz + tree spec.
+
+Saves model params, server-optimizer state, and sampler state (the K-Vib
+cumulative feedback omega is part of the training state — a restarted server
+must not forget what it learned about clients).
+
+Layout:  <dir>/<name>.npz          flat arrays keyed by index
+         <dir>/<name>.treedef.txt  str(jax.tree_util.tree_structure)
+Restore requires a template pytree with matching structure (the standard
+"abstract state" pattern); arrays are checked for shape/dtype drift.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint"]
+
+
+def save_checkpoint(path: str, state) -> str:
+    """Write `state` (any pytree of arrays) to `<path>.npz`. Returns the file."""
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    fname = path if path.endswith(".npz") else path + ".npz"
+    tmp = fname + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, fname)  # atomic publish
+    with open(fname.replace(".npz", ".treedef.txt"), "w") as f:
+        f.write(str(treedef))
+    return fname
+
+
+def restore_checkpoint(path: str, template):
+    """Restore into the structure of `template`; validates shapes/dtypes."""
+    fname = path if path.endswith(".npz") else path + ".npz"
+    leaves_t, treedef = jax.tree_util.tree_flatten(template)
+    with np.load(fname) as data:
+        n = len(data.files)
+        if n != len(leaves_t):
+            raise ValueError(
+                f"checkpoint has {n} leaves, template has {len(leaves_t)}"
+            )
+        leaves = []
+        for i, t in enumerate(leaves_t):
+            arr = data[f"leaf_{i}"]
+            t_arr = np.asarray(t)
+            if arr.shape != t_arr.shape:
+                raise ValueError(
+                    f"leaf {i}: checkpoint shape {arr.shape} != template {t_arr.shape}"
+                )
+            leaves.append(arr.astype(t_arr.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,17 @@
+from repro.configs.registry import (
+    ARCH_MODULES,
+    INPUT_SHAPES,
+    get_config,
+    input_specs,
+    list_archs,
+    step_kind,
+)
+
+__all__ = [
+    "ARCH_MODULES",
+    "INPUT_SHAPES",
+    "get_config",
+    "input_specs",
+    "list_archs",
+    "step_kind",
+]

@@ -1,0 +1,24 @@
+"""arctic-480b [moe] — 35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000,
+MoE 128 experts top-2 PLUS an always-on dense residual MLP branch.
+[hf:Snowflake/snowflake-arctic-base]"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=4864,  # dense residual branch width
+    vocab=32000,
+    block_pattern=("moe",),
+    n_experts=128,
+    top_k=2,
+    moe_d_ff=4864,
+    dense_residual=True,
+    tie_embeddings=False,
+    round_mode="cohort_sequential",
+    long_context_ok=False,
+    source="hf:Snowflake/snowflake-arctic-base",
+)

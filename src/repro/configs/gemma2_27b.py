@@ -1,0 +1,27 @@
+"""gemma2-27b [dense] — 46L d_model=4608 32H (GQA kv=16) d_ff=36864
+vocab=256000; alternating local(4096-window)/global attention, attention and
+final logit soft-capping, embedding scaling. [arXiv:2408.00118]
+long_500k is SKIPPED: the global layers are quadratic (DESIGN.md section 4)."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma2-27b",
+    family="dense",
+    n_layers=46,
+    d_model=4608,
+    n_heads=32,
+    n_kv_heads=16,
+    d_ff=36864,
+    vocab=256000,
+    head_dim=128,
+    block_pattern=("attn_local", "attn"),
+    sliding_window=4096,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    scale_embed=True,
+    act="gelu",
+    tie_embeddings=True,
+    round_mode="cohort_sequential",
+    long_context_ok=False,
+    source="arXiv:2408.00118",
+)

@@ -1,0 +1,31 @@
+"""llama3.2-1b [dense] — 16L d_model=2048 32H (GQA kv=8) d_ff=8192
+vocab=128256. [hf:meta-llama/Llama-3.2-1B]
+long_500k runs via the beyond-paper sliding-window variant (window 8192):
+the paper-assigned dense arch is quadratic, but the framework exposes a
+block-local attention switch, exercised by this config's `sw` sibling."""
+import dataclasses
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama3.2-1b",
+    family="dense",
+    n_layers=16,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab=128256,
+    rope_theta=5e5,
+    block_pattern=("attn",),
+    tie_embeddings=True,
+    round_mode="client_parallel",
+    long_context_ok=True,  # served long-context via the sliding-window variant
+    sliding_window=8192,  # used only by "attn_local" blocks — see SW_CONFIG
+    source="hf:meta-llama/Llama-3.2-1B",
+)
+
+# Beyond-paper long-context variant: all layers sliding-window (8192).
+SW_CONFIG = dataclasses.replace(
+    CONFIG, name="llama3.2-1b-sw", block_pattern=("attn_local",)
+)

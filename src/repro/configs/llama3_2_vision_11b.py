@@ -1,0 +1,27 @@
+"""llama-3.2-vision-11b [vlm] — 40L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=128256; every 5th layer is a gated cross-attention block over image
+patch embeddings. [hf:meta-llama/Llama-3.2-11B-Vision]
+The ViT vision encoder is STUBBED per the assignment carve-out: input_specs
+provides precomputed patch embeddings (1601 patches, dim 1280 — the
+Llama-vision projector input width)."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=128256,
+    rope_theta=5e5,
+    block_pattern=("attn", "attn", "attn", "attn", "cross_attn"),
+    frontend="vision",
+    frontend_seq=1601,
+    frontend_dim=1280,
+    tie_embeddings=False,
+    round_mode="cohort_sequential",
+    long_context_ok=False,
+    source="hf:meta-llama/Llama-3.2-11B-Vision",
+)

@@ -1,0 +1,26 @@
+"""qwen3-moe-235b-a22b [moe] — 94L d_model=4096 64H (GQA kv=4) expert d_ff=1536
+vocab=151936, MoE 128 experts top-8.  [hf:Qwen/Qwen3-30B-A3B scaled per
+assignment]  Qwen3 uses explicit head_dim=128 with per-head q/k RMSNorm."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    d_ff=1536,
+    vocab=151936,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1e6,
+    block_pattern=("moe",),
+    n_experts=128,
+    top_k=8,
+    moe_d_ff=1536,
+    tie_embeddings=False,
+    round_mode="cohort_sequential",
+    long_context_ok=False,
+    source="hf:Qwen/Qwen3-30B-A3B",
+)

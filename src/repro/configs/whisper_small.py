@@ -1,0 +1,27 @@
+"""whisper-small [audio] — enc-dec, 12L encoder + 12L decoder, d_model=768,
+12H (kv=12), d_ff=3072, vocab=51865.  [arXiv:2212.04356]
+The mel-spectrogram + conv frontend is STUBBED: input_specs provides
+precomputed frame embeddings (1500 frames post-conv) per the assignment
+carve-out; the encoder transformer consumes them."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-small",
+    family="audio",
+    n_layers=12,  # decoder depth
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab=51865,
+    block_pattern=("dec",),
+    encoder_layers=12,
+    frontend="audio",
+    frontend_seq=1500,
+    frontend_dim=768,
+    act="gelu",
+    tie_embeddings=True,
+    round_mode="client_parallel",
+    long_context_ok=False,  # full attention enc-dec
+    source="arXiv:2212.04356",
+)

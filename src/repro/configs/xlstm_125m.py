@@ -1,0 +1,20 @@
+"""xlstm-125m [ssm] — 12L d_model=768 4H d_ff=0 vocab=50304; alternating
+sLSTM + mLSTM blocks (blocks carry their own projections; d_ff=0 per spec).
+[arXiv:2405.04517]  Recurrent O(1) state -> runs long_500k decode."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-125m",
+    family="ssm",
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab=50304,
+    block_pattern=("mlstm", "slstm"),
+    tie_embeddings=True,
+    round_mode="client_parallel",
+    long_context_ok=True,
+    source="arXiv:2405.04517",
+)

@@ -1,0 +1,26 @@
+"""zamba2-1.2b [hybrid] — 38 blocks d_model=2048, Mamba2 backbone
+(ssm_state=64) + a SHARED attention block (32H kv=32, d_ff=8192) invoked at
+fixed positions with shared weights. [arXiv:2411.15242]
+Pattern: 19-slot group (18 mamba2 + 1 shared_attn) x 2 = 38 blocks; the
+shared block's weights are stored once (params['shared']) while its KV cache
+is per-invocation.  Mamba2 state is O(1) -> runs long_500k decode."""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab=32000,
+    block_pattern=("mamba2",) * 18 + ("shared_attn",),
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    tie_embeddings=True,
+    round_mode="client_parallel",
+    long_context_ok=True,
+    source="arXiv:2411.15242",
+)

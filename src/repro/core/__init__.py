@@ -1,0 +1,44 @@
+"""Core contribution of the paper: adaptive unbiased client sampling.
+
+Public API:
+  solver      — budgeted water-filling probabilities (Lemmas 2.2 / 5.1 / B.8)
+  samplers    — K-Vib (Algorithm 2) + baselines (uniform, Mabs, Vrb, Avare)
+  estimator   — unbiased global estimation d^t and variance diagnostics
+  regret      — dynamic/static regret trackers (eqs. 8-9)
+"""
+from repro.core import estimator, regret, samplers, solver
+from repro.core.samplers import (
+    Avare,
+    KVib,
+    Mabs,
+    OptimalISP,
+    SampleResult,
+    Sampler,
+    SamplerState,
+    UniformISP,
+    UniformRSP,
+    Vrb,
+    make_sampler,
+)
+from repro.core.solver import isp_probabilities, mix_probabilities, rsp_probabilities
+
+__all__ = [
+    "estimator",
+    "regret",
+    "samplers",
+    "solver",
+    "Avare",
+    "KVib",
+    "Mabs",
+    "OptimalISP",
+    "SampleResult",
+    "Sampler",
+    "SamplerState",
+    "UniformISP",
+    "UniformRSP",
+    "Vrb",
+    "make_sampler",
+    "isp_probabilities",
+    "mix_probabilities",
+    "rsp_probabilities",
+]

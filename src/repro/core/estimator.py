@@ -1,0 +1,103 @@
+"""Unbiased global estimation (Definition 2.1) and variance diagnostics.
+
+The server-side estimate of the full-participation update
+
+    d^t = sum_{i in S^t} lambda_i g_i^t / p_i^t          (ISP, mask form)
+    d^t = (1/K) sum_{j=1..K} lambda_{i_j} g_{i_j} / q_{i_j}   (RSP-WR form)
+
+operates on *pytrees* of client updates.  Two layouts are supported:
+
+* stacked  — leaves carry a leading client axis (N, ...); used by the
+  simulation substrate and the paper-scale experiments.
+* weights-only — ``client_weights`` returns the scalar coefficient per client
+  so the distributed runtime can pre-scale local shards before the collective
+  reduce (DESIGN.md section 3: scale-then-psum, one pass).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.samplers import SampleResult
+
+__all__ = [
+    "client_weights",
+    "aggregate_stacked",
+    "full_aggregate_stacked",
+    "isp_variance",
+    "rsp_variance_bound",
+    "empirical_sq_error",
+]
+
+
+def client_weights(
+    draw: SampleResult, lam: jax.Array, procedure: str, budget: int
+) -> jax.Array:
+    """Scalar aggregation coefficient per client (zero for unsampled).
+
+    The estimator is always ``d = sum_i w_i g_i`` with w from this function —
+    the distributed round pre-scales each client's delta by ``w_i`` locally and
+    reduces, so estimation costs one collective regardless of procedure.
+    """
+    lam = jnp.asarray(lam)
+    if procedure == "isp":
+        return jnp.where(
+            draw.mask, lam / jnp.maximum(draw.marginals, 1e-30), 0.0
+        )
+    if procedure == "rsp_wr":
+        q = jnp.maximum(draw.draw_probs, 1e-30)
+        return draw.counts.astype(lam.dtype) * lam / (budget * q)
+    if procedure == "rsp_wor":
+        # Uniform without replacement: marginal p_i = K/N exactly.
+        return jnp.where(
+            draw.mask, lam / jnp.maximum(draw.marginals, 1e-30), 0.0
+        )
+    raise ValueError(f"unknown procedure {procedure!r}")
+
+
+def aggregate_stacked(updates, weights: jax.Array):
+    """d = sum_i w_i * g_i over a stacked pytree (leading client axis)."""
+
+    def agg(leaf):
+        w = weights.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        return jnp.sum(w * leaf, axis=0)
+
+    return jax.tree_util.tree_map(agg, updates)
+
+
+def full_aggregate_stacked(updates, lam: jax.Array):
+    """Full-participation target sum_i lambda_i g_i."""
+
+    def agg(leaf):
+        w = lam.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+        return jnp.sum(w * leaf, axis=0)
+
+    return jax.tree_util.tree_map(agg, updates)
+
+
+def isp_variance(scores: jax.Array, p: jax.Array) -> jax.Array:
+    """Exact ISP estimator variance (Lemma 2.1, equality case):
+
+    V(S) = sum_i (1 - p_i) * a_i^2 / p_i,   a_i = lambda_i ||g_i||.
+    """
+    scores = jnp.asarray(scores)
+    p = jnp.asarray(p)
+    return jnp.sum((1.0 - p) * scores**2 / jnp.maximum(p, 1e-30))
+
+
+def rsp_variance_bound(scores: jax.Array, p: jax.Array, budget: int) -> jax.Array:
+    """RSP upper bound of Lemma 2.1: (N-K)/(N-1) * sum_i a_i^2 / p_i."""
+    scores = jnp.asarray(scores)
+    n = scores.shape[0]
+    coef = (n - budget) / max(n - 1, 1)
+    return coef * jnp.sum(scores**2 / jnp.maximum(p, 1e-30))
+
+
+def empirical_sq_error(estimate, target) -> jax.Array:
+    """|| d - sum lambda g ||^2 across a pytree."""
+    sq = jax.tree_util.tree_map(
+        lambda a, b: jnp.sum((a.astype(jnp.float32) - b.astype(jnp.float32)) ** 2),
+        estimate,
+        target,
+    )
+    return jax.tree_util.tree_reduce(jnp.add, sq)

@@ -1,0 +1,63 @@
+"""Regret and sampling-quality metrics (Sections 4-5).
+
+Used by the experiment drivers to reproduce the paper's Figure 2/3/6 curves:
+
+* dynamic regret   Regret_D(T) = sum_t l_t(p^t) - sum_t min_p l_t(p)   (eq. 8)
+* static  regret   Regret_S(T) = sum_t l_t(p^t) - min_p sum_t l_t(p)   (eq. 9)
+* sampling quality Q(S^t) upper bound l_t(p^t) - l_t(p*)               (Sec 5.1)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import solver
+
+__all__ = ["RegretTracker"]
+
+
+@dataclasses.dataclass
+class RegretTracker:
+    """Accumulates per-round online costs from *full* feedback (simulation-side
+
+    oracle knowledge — available in experiments, not on a real server)."""
+
+    budget: int
+    costs: list = dataclasses.field(default_factory=list)  # l_t(p^t)
+    opt_costs: list = dataclasses.field(default_factory=list)  # min_p l_t(p)
+    score_history: list = dataclasses.field(default_factory=list)
+
+    def record(self, full_scores: jax.Array, p_used: jax.Array) -> None:
+        full_scores = np.asarray(full_scores)
+        p_used = np.asarray(p_used)
+        cost = float(solver.expected_cost(full_scores, p_used))
+        opt = float(solver.optimal_cost(full_scores, self.budget))
+        self.costs.append(cost)
+        self.opt_costs.append(opt)
+        self.score_history.append(full_scores)
+
+    # -- metrics ---------------------------------------------------------
+
+    def dynamic_regret(self) -> np.ndarray:
+        """Cumulative eq. (8) per round."""
+        c = np.asarray(self.costs)
+        o = np.asarray(self.opt_costs)
+        return np.cumsum(c - o)
+
+    def static_regret(self) -> float:
+        """eq. (9) first term: vs the best fixed p in hindsight."""
+        hist = np.stack(self.score_history)  # (T, N)
+        cum_sq = np.sqrt(np.sum(hist**2, axis=0))  # sqrt(pi^2_{1:T}(i))
+        p_star = np.asarray(solver.isp_probabilities(jnp.asarray(cum_sq), self.budget))
+        best_fixed = sum(
+            float(solver.expected_cost(jnp.asarray(s), jnp.asarray(p_star)))
+            for s in self.score_history
+        )
+        return float(np.sum(self.costs) - best_fixed)
+
+    def quality_gap(self) -> np.ndarray:
+        """Per-round Q(S^t) upper bound l_t(p^t) - l_t(p^*_t)."""
+        return np.asarray(self.costs) - np.asarray(self.opt_costs)

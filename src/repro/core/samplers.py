@@ -1,0 +1,497 @@
+"""Client samplers: K-Vib (Algorithm 2) and the paper's baselines.
+
+Every sampler is a frozen configuration object with pure functions over an
+explicit state pytree, so the whole sampling pipeline is jittable and can be
+checkpointed alongside the model:
+
+    sampler = KVib(n=N, budget=K, horizon=T)
+    state   = sampler.init()
+    probs   = sampler.probabilities(state)        # marginal inclusion probs
+    draw    = sampler.sample(state, key)          # SampleResult
+    state   = sampler.update(state, draw, feedback)
+
+``feedback`` is the paper's ``pi_t(i) = lambda_i * ||g_i^t||`` for the clients
+in the cohort (zeros elsewhere); the importance correction by the *sampling*
+probability is done inside ``update`` (eq. under Theorem 5.2:
+``omega(i) += pi_t^2(i) / p~_i``).
+
+Two sampling procedures coexist (Section 2 of the paper):
+
+* ISP — independent Bernoulli per client (``SampleResult.mask``); the
+  estimator weight for client i is ``1/p_i``.
+* RSP — K draws from a distribution over clients; we implement the
+  with-replacement variant used by the online-variance-reduction baselines
+  (Mabs, Vrb, Avare: one draw per step in their origin papers, K draws per
+  round in the FL port) via ``SampleResult.counts`` and the without-
+  replacement uniform variant used by vanilla FedAvg.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import solver
+
+__all__ = [
+    "SampleResult",
+    "Sampler",
+    "UniformISP",
+    "UniformRSP",
+    "KVib",
+    "Vrb",
+    "Mabs",
+    "Avare",
+    "OptimalISP",
+    "make_sampler",
+]
+
+
+class SampleResult(NamedTuple):
+    """Outcome of one sampling step.
+
+    mask:      (N,) bool — client included (ISP semantics / union for RSP).
+    counts:    (N,) int32 — number of draws (RSP with replacement); for ISP
+               this equals mask.astype(int).
+    marginals: (N,) float — inclusion probability P(i in S) used by mask-form
+               estimators (ISP) and diagnostics.
+    draw_probs:(N,) float — per-draw distribution (sums to 1) for RSP-WR
+               estimators; for ISP this is marginals / K (diagnostic only).
+    """
+
+    mask: jax.Array
+    counts: jax.Array
+    marginals: jax.Array
+    draw_probs: jax.Array
+
+    @property
+    def size(self) -> jax.Array:
+        return jnp.sum(self.counts)
+
+
+def _isp_draw(key: jax.Array, marginals: jax.Array) -> SampleResult:
+    mask = jax.random.uniform(key, marginals.shape) < marginals
+    return SampleResult(
+        mask=mask,
+        counts=mask.astype(jnp.int32),
+        marginals=marginals,
+        draw_probs=marginals / jnp.maximum(jnp.sum(marginals), 1e-30),
+    )
+
+
+def _rsp_wr_draw(key: jax.Array, draw_probs: jax.Array, budget: int) -> SampleResult:
+    """K draws with replacement from a normalized distribution."""
+    n = draw_probs.shape[0]
+    idx = jax.random.choice(key, n, shape=(budget,), p=draw_probs)
+    counts = jnp.zeros((n,), jnp.int32).at[idx].add(1)
+    mask = counts > 0
+    marginals = 1.0 - (1.0 - draw_probs) ** budget
+    return SampleResult(mask=mask, counts=counts, marginals=marginals, draw_probs=draw_probs)
+
+
+def _rsp_wor_uniform_draw(key: jax.Array, n: int, budget: int) -> SampleResult:
+    idx = jax.random.choice(key, n, shape=(budget,), replace=False)
+    counts = jnp.zeros((n,), jnp.int32).at[idx].add(1)
+    marginals = jnp.full((n,), budget / n)
+    return SampleResult(
+        mask=counts > 0,
+        counts=counts,
+        marginals=marginals,
+        draw_probs=jnp.full((n,), 1.0 / n),
+    )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SamplerState:
+    """Generic sampler state: cumulative statistics + round counter."""
+
+    stats: jax.Array  # (N,) cumulative (importance-weighted) squared feedback
+    aux: jax.Array  # (N,) sampler-specific (e.g. Avare's latest estimates)
+    t: jax.Array  # scalar int32 round counter
+
+    def tree_flatten(self):
+        return (self.stats, self.aux, self.t), None
+
+    @classmethod
+    def tree_unflatten(cls, _, children):
+        return cls(*children)
+
+
+@dataclasses.dataclass(frozen=True)
+class Sampler:
+    """Base: uniform-ISP behaviour; subclasses override the three hooks."""
+
+    n: int
+    budget: int
+    procedure: str = "isp"  # "isp" | "rsp_wr" | "rsp_wor"
+
+    # -- hooks ---------------------------------------------------------------
+    def init(self) -> SamplerState:
+        return SamplerState(
+            stats=jnp.zeros((self.n,), jnp.float32),
+            aux=jnp.zeros((self.n,), jnp.float32),
+            t=jnp.zeros((), jnp.int32),
+        )
+
+    def probabilities(self, state: SamplerState) -> jax.Array:
+        """Marginal inclusion probabilities (sum == budget for ISP)."""
+        return jnp.full((self.n,), self.budget / self.n)
+
+    def sample(self, state: SamplerState, key: jax.Array) -> SampleResult:
+        if self.procedure == "isp":
+            return _isp_draw(key, self.probabilities(state))
+        if self.procedure == "rsp_wr":
+            p = self.probabilities(state)
+            return _rsp_wr_draw(key, p / jnp.maximum(jnp.sum(p), 1e-30), self.budget)
+        return _rsp_wor_uniform_draw(key, self.n, self.budget)
+
+    def update(
+        self, state: SamplerState, draw: SampleResult, feedback: jax.Array
+    ) -> SamplerState:
+        return dataclasses.replace(state, t=state.t + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformISP(Sampler):
+    """Independent Bernoulli(K/N) — the naive-ISP baseline of Section 3."""
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformRSP(Sampler):
+    """Vanilla FedAvg sampling: K uniform without replacement."""
+
+    procedure: str = "rsp_wor"
+
+
+@dataclasses.dataclass(frozen=True)
+class KVib(Sampler):
+    """Algorithm 2 — the paper's contribution.
+
+    p^t from the FTRL water-filling solution on sqrt(omega + gamma)
+    (Lemma 5.1), mixed with theta * K/N (eq. 12), drawn independently, and
+    updated with importance-weighted squared feedback.
+
+    Hyperparameters follow Section 6: theta = (N/(T K))^{1/3},
+    gamma ~= G^2 N / (theta K) with G estimated from first-round feedback
+    when ``gamma`` is left as None (``auto_gamma``).
+    """
+
+    horizon: int = 500
+    theta: float | None = None
+    gamma: float | None = None
+    p_min: float = 0.0  # optional explicit floor below the mixing floor
+
+    def _theta(self) -> float:
+        if self.theta is not None:
+            return float(self.theta)
+        return float(min(1.0, (self.n / (self.horizon * self.budget)) ** (1.0 / 3.0)))
+
+    def init(self) -> SamplerState:
+        st = super().init()
+        # aux[0] stores the running gamma (auto-estimated from first feedback);
+        # keep one slot per client for pytree-shape uniformity, broadcast use.
+        gamma0 = 0.0 if self.gamma is None else float(self.gamma)
+        return dataclasses.replace(st, aux=jnp.full((self.n,), gamma0, jnp.float32))
+
+    def probabilities(self, state: SamplerState) -> jax.Array:
+        gamma = jnp.maximum(state.aux[0], 1e-12)
+        scores = jnp.sqrt(state.stats + gamma)
+        p = solver.isp_probabilities(scores, self.budget, p_min=self.p_min)
+        return solver.mix_probabilities(p, self._theta(), self.budget)
+
+    def update(
+        self, state: SamplerState, draw: SampleResult, feedback: jax.Array
+    ) -> SamplerState:
+        p_used = draw.marginals
+        contrib = jnp.where(
+            draw.mask, feedback**2 / jnp.maximum(p_used, 1e-30), 0.0
+        )
+        stats = state.stats + contrib
+        aux = state.aux
+        if self.gamma is None:
+            # First-round auto-gamma: G ~ mean of observed feedback (paper
+            # Section 6 "FL and sampler hyperparameters").
+            g_est = jnp.sum(jnp.where(draw.mask, feedback, 0.0)) / jnp.maximum(
+                jnp.sum(draw.mask), 1
+            )
+            gamma_auto = g_est**2 * self.n / (self._theta() * self.budget)
+            aux = jnp.where(state.t == 0, jnp.full_like(aux, gamma_auto), aux)
+        return SamplerState(stats=stats, aux=aux, t=state.t + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Vrb(Sampler):
+    """Variance-Reducer-Bandit (Borsos et al., 2018) — RSP baseline.
+
+    FTRL on the probability *simplex*: p_i ~ sqrt(cumulative squared feedback
+    + gamma), mixed with theta-uniform, K draws with replacement.
+    """
+
+    procedure: str = "rsp_wr"
+    horizon: int = 500
+    theta: float | None = None
+    gamma: float | None = None
+
+    def _theta(self) -> float:
+        if self.theta is not None:
+            return float(self.theta)
+        return float(min(1.0, (self.n / self.horizon) ** (1.0 / 3.0)))
+
+    def init(self) -> SamplerState:
+        st = super().init()
+        gamma0 = 0.0 if self.gamma is None else float(self.gamma)
+        return dataclasses.replace(st, aux=jnp.full((self.n,), gamma0, jnp.float32))
+
+    def probabilities(self, state: SamplerState) -> jax.Array:
+        gamma = jnp.maximum(state.aux[0], 1e-12)
+        w = jnp.sqrt(state.stats + gamma)
+        p = w / jnp.maximum(jnp.sum(w), 1e-30)
+        theta = self._theta()
+        return (1.0 - theta) * p + theta / self.n
+
+    def sample(self, state: SamplerState, key: jax.Array) -> SampleResult:
+        return _rsp_wr_draw(key, self.probabilities(state), self.budget)
+
+    def update(
+        self, state: SamplerState, draw: SampleResult, feedback: jax.Array
+    ) -> SamplerState:
+        # Importance-weight against the per-draw probability; each draw of i
+        # contributes feedback^2 / q_i (counts-aware).
+        q = jnp.maximum(draw.draw_probs, 1e-30)
+        contrib = draw.counts.astype(feedback.dtype) * feedback**2 / q
+        stats = state.stats + contrib / jnp.maximum(self.budget, 1)
+        aux = state.aux
+        if self.gamma is None:
+            g_est = jnp.sum(jnp.where(draw.mask, feedback, 0.0)) / jnp.maximum(
+                jnp.sum(draw.mask), 1
+            )
+            gamma_auto = g_est**2 * self.n / jnp.maximum(self._theta(), 1e-6)
+            aux = jnp.where(state.t == 0, jnp.full_like(aux, gamma_auto), aux)
+        return SamplerState(stats=stats, aux=aux, t=state.t + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Mabs(Sampler):
+    """Multi-armed-bandit sampler (Salehi et al., 2017) — EXP3-style RSP.
+
+    Multiplicative-weights on importance-weighted squared feedback with a
+    stability stepsize eta (0.4 per the original paper), theta-uniform mixing.
+    """
+
+    procedure: str = "rsp_wr"
+    eta: float = 0.4
+    theta: float = 0.1
+
+    def probabilities(self, state: SamplerState) -> jax.Array:
+        logw = state.stats - jnp.max(state.stats)
+        w = jnp.exp(logw)
+        p = w / jnp.maximum(jnp.sum(w), 1e-30)
+        return (1.0 - self.theta) * p + self.theta / self.n
+
+    def sample(self, state: SamplerState, key: jax.Array) -> SampleResult:
+        return _rsp_wr_draw(key, self.probabilities(state), self.budget)
+
+    def update(
+        self, state: SamplerState, draw: SampleResult, feedback: jax.Array
+    ) -> SamplerState:
+        q = jnp.maximum(draw.draw_probs, 1e-30)
+        # Normalized reward in [0, ~1] per draw for EXP3 stability.
+        fb2 = feedback**2
+        scale = jnp.maximum(jnp.max(jnp.where(draw.mask, fb2, 0.0)), 1e-30)
+        reward = draw.counts.astype(feedback.dtype) * (fb2 / scale) / q
+        stats = state.stats + self.eta * reward / jnp.maximum(self.budget, 1) / self.n
+        return SamplerState(stats=stats, aux=state.aux, t=state.t + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Avare(Sampler):
+    """Avare (El Hanchi & Stephens, 2020) — RSP baseline.
+
+    Maintains a per-client estimate of the latest feedback magnitude (their
+    ``a_i`` upper-confidence estimates with decreasing stepsizes); samples
+    proportionally with a probability floor p_min = 1/(5N).
+    """
+
+    procedure: str = "rsp_wr"
+    p_min_frac: float = 0.2  # p_min = p_min_frac / N
+
+    def init(self) -> SamplerState:
+        st = super().init()
+        # Optimistic initialization so unexplored clients keep getting drawn.
+        return dataclasses.replace(st, aux=jnp.full((self.n,), jnp.inf, jnp.float32))
+
+    def probabilities(self, state: SamplerState) -> jax.Array:
+        est = jnp.where(jnp.isfinite(state.aux), state.aux, 0.0)
+        explored = jnp.isfinite(state.aux)
+        # Unexplored clients get the max observed estimate (optimism).
+        opt = jnp.where(
+            explored, est, jnp.max(jnp.where(explored, est, 0.0)) + 1e-6
+        )
+        opt = jnp.where(jnp.any(explored), opt, jnp.ones_like(opt))
+        p = opt / jnp.maximum(jnp.sum(opt), 1e-30)
+        p_min = self.p_min_frac / self.n
+        p = jnp.maximum(p, p_min)
+        return p / jnp.sum(p)
+
+    def sample(self, state: SamplerState, key: jax.Array) -> SampleResult:
+        return _rsp_wr_draw(key, self.probabilities(state), self.budget)
+
+    def update(
+        self, state: SamplerState, draw: SampleResult, feedback: jax.Array
+    ) -> SamplerState:
+        # Latest-value estimate for sampled clients (constant stepsize delta=1).
+        aux = jnp.where(draw.mask, feedback, state.aux)
+        return SamplerState(stats=state.stats, aux=aux, t=state.t + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimalISP(Sampler):
+    """Oracle (Lemma 2.2): needs the *current* full feedback — diagnostics only.
+
+    ``update`` stores the full feedback vector; ``probabilities`` water-fills
+    it. The FL server cannot run this without full participation; we use it to
+    measure sampling quality Q(S^t) and the beta_1/beta_2 terms of Thm 4.1.
+    """
+
+    def update(
+        self, state: SamplerState, draw: SampleResult, feedback: jax.Array
+    ) -> SamplerState:
+        return SamplerState(stats=feedback, aux=state.aux, t=state.t + 1)
+
+    def probabilities(self, state: SamplerState) -> jax.Array:
+        has_fb = jnp.any(state.stats > 0)
+        p_opt = solver.isp_probabilities(state.stats, self.budget)
+        return jnp.where(has_fb, p_opt, jnp.full((self.n,), self.budget / self.n))
+
+
+_REGISTRY = {
+    "uniform_isp": UniformISP,
+    "uniform_rsp": UniformRSP,
+    "kvib": KVib,
+    "vrb": Vrb,
+    "mabs": Mabs,
+    "avare": Avare,
+    "optimal_isp": OptimalISP,
+}
+
+
+def make_sampler(name: str, n: int, budget: int, **kw) -> Sampler:
+    try:
+        cls = _REGISTRY[name]
+    except KeyError as e:
+        raise ValueError(f"unknown sampler {name!r}; options: {sorted(_REGISTRY)}") from e
+    return cls(n=n, budget=budget, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class Osmd(Sampler):
+    """OSMD-style sampler (Zhao et al. 2021, paper Appendix E.3).
+
+    Online stochastic mirror descent on the sampling distribution with the
+    importance-weighted squared-feedback loss gradient — the paper's
+    discussion point: OSMD keeps the RSP procedure and replaces the mixing
+    strategy with a mirror-descent update; our ISP findings are orthogonal
+    and could be composed with it.  Implemented as an RSP baseline: one
+    mirror step per round on the negative-entropy geometry (multiplicative
+    update + simplex projection with a floor).
+    """
+
+    procedure: str = "rsp_wr"
+    lr: float = 0.5
+    p_min_frac: float = 0.2  # floor = p_min_frac / N
+
+    def init(self) -> SamplerState:
+        st = super().init()
+        return dataclasses.replace(
+            st, stats=jnp.full((self.n,), 1.0 / self.n, jnp.float32)
+        )
+
+    def probabilities(self, state: SamplerState) -> jax.Array:
+        return state.stats
+
+    def sample(self, state: SamplerState, key: jax.Array) -> SampleResult:
+        return _rsp_wr_draw(key, state.stats, self.budget)
+
+    def update(
+        self, state: SamplerState, draw: SampleResult, feedback: jax.Array
+    ) -> SamplerState:
+        p = state.stats
+        q = jnp.maximum(draw.draw_probs, 1e-30)
+        # grad of E[pi^2/p] wrt p at sampled points: -pi^2/p^2 (importance wt)
+        grad = -draw.counts.astype(jnp.float32) * feedback**2 / (q * p**2)
+        grad = grad / jnp.maximum(self.budget, 1)
+        # normalized mirror step: p <- p * exp(-lr * grad / scale)
+        scale = jnp.maximum(jnp.max(jnp.abs(grad)), 1e-30)
+        logp = jnp.log(p) - self.lr * grad / scale
+        p_new = jax.nn.softmax(logp)
+        floor = self.p_min_frac / self.n
+        p_new = jnp.maximum(p_new, floor)
+        p_new = p_new / jnp.sum(p_new)
+        return SamplerState(stats=p_new, aux=state.aux, t=state.t + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusteredKVib(Sampler):
+    """Cluster-aware K-Vib (paper Section 7: 'unstable local feedback ...
+    can be addressed with client clustering', cf. Fraboni et al. 2021).
+
+    Clients are partitioned into m clusters (e.g. by data size or domain);
+    the FTRL statistics are pooled *within clusters*, so a client inherits
+    its cluster's feedback history even before being sampled — faster
+    exploration when clients within a cluster are statistically exchangeable.
+    The sampling itself stays independent per client (ISP, unbiased as ever).
+    """
+
+    cluster_ids: tuple = ()  # len n, values in [0, m)
+    horizon: int = 500
+    theta: float | None = None
+    gamma: float | None = None
+
+    def _theta(self) -> float:
+        if self.theta is not None:
+            return float(self.theta)
+        return float(min(1.0, (self.n / (self.horizon * self.budget)) ** (1.0 / 3.0)))
+
+    def init(self) -> SamplerState:
+        st = super().init()
+        gamma0 = 0.0 if self.gamma is None else float(self.gamma)
+        return dataclasses.replace(st, aux=jnp.full((self.n,), gamma0, jnp.float32))
+
+    def _cluster_mean_stats(self, stats: jax.Array) -> jax.Array:
+        cid = jnp.asarray(self.cluster_ids, jnp.int32)
+        m = int(max(self.cluster_ids)) + 1
+        sums = jnp.zeros((m,), jnp.float32).at[cid].add(stats)
+        cnts = jnp.zeros((m,), jnp.float32).at[cid].add(1.0)
+        return (sums / jnp.maximum(cnts, 1.0))[cid]
+
+    def probabilities(self, state: SamplerState) -> jax.Array:
+        from repro.core import solver
+
+        gamma = jnp.maximum(state.aux[0], 1e-12)
+        pooled = self._cluster_mean_stats(state.stats)
+        scores = jnp.sqrt(pooled + gamma)
+        p = solver.isp_probabilities(scores, self.budget)
+        return solver.mix_probabilities(p, self._theta(), self.budget)
+
+    def update(
+        self, state: SamplerState, draw: SampleResult, feedback: jax.Array
+    ) -> SamplerState:
+        contrib = jnp.where(
+            draw.mask, feedback**2 / jnp.maximum(draw.marginals, 1e-30), 0.0
+        )
+        stats = state.stats + contrib
+        aux = state.aux
+        if self.gamma is None:
+            g_est = jnp.sum(jnp.where(draw.mask, feedback, 0.0)) / jnp.maximum(
+                jnp.sum(draw.mask), 1
+            )
+            gamma_auto = g_est**2 * self.n / (self._theta() * self.budget)
+            aux = jnp.where(state.t == 0, jnp.full_like(aux, gamma_auto), aux)
+        return SamplerState(stats=stats, aux=aux, t=state.t + 1)
+
+
+_REGISTRY["osmd"] = Osmd
+_REGISTRY["clustered_kvib"] = ClusteredKVib

@@ -1,0 +1,174 @@
+"""Budgeted water-filling solvers for independent-sampling probabilities.
+
+This module implements the closed-form solutions of the paper:
+
+* Lemma 2.2 (ISP): ``min_p sum_i a_i^2 / p_i`` subject to ``sum_i p_i = K``,
+  ``0 < p_i <= 1`` — the optimal independent-sampling probabilities given
+  scores ``a_i = lambda_i * ||g_i||``.
+* Lemma 5.1 / Lemma B.8: the same program with an additional floor
+  ``p_i >= p_min`` (the FTRL solution with regularizer gamma uses
+  ``a_i = sqrt(pi^2_{1:t-1}(i) + gamma)``).
+* Lemma 2.2 (RSP): ``p_i = K * a_i / sum_j a_j`` (probabilities for the
+  random-sampling procedure; minimizes the *loose* RSP variance bound).
+
+TPU adaptation note (DESIGN.md section 3): the paper's Appendix G maintains an
+incrementally sorted list with binary-search insertion — a serial-CPU idiom.
+Here the KKT system is solved *vectorized*: the stationarity condition gives
+``p_i = clip(a_i / s, p_min, 1)`` for a single scalar water level ``s`` chosen
+so that ``sum_i p_i = K``.  ``f(s) = sum_i clip(a_i/s, p_min, 1)`` is monotone
+non-increasing in ``s``, so the level is found by monotone bisection (fixed
+iteration count => jittable, O(N) per iteration) and then *snapped* to the
+exact rational solution on the identified middle segment, recovering the
+closed form of Lemma B.8 to machine precision.  O(N) per solve on device,
+O(N log N) overall with the sort-free formulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "isp_probabilities",
+    "rsp_probabilities",
+    "mix_probabilities",
+    "expected_cost",
+    "optimal_cost",
+]
+
+@functools.partial(jax.jit, static_argnames=())
+def _isp_solve(a: jax.Array, budget: jax.Array, p_min: jax.Array) -> jax.Array:
+    """Solve min sum a_i^2/p_i s.t. sum p = budget, p_min <= p <= 1.
+
+    Exact breakpoint search: the KKT solution is p_i = clip(a_i/s, p_min, 1)
+    for a scalar water level s.  f(s) = sum_i clip(a_i/s, p_min, 1) is
+    monotone non-increasing and piecewise-hyperbolic with breakpoints at
+    s = a_i (cap boundary) and s = a_i / p_min (floor boundary).  We evaluate
+    f at all 2N breakpoints via sorted prefix sums (O(N log N)), locate the
+    segment bracketing the budget, and solve the segment's closed form
+    s* = c / z with c = sum of middle scores, z = budget - |U| - |L| p_min —
+    exactly Lemma B.8.
+
+    Requires a_i > 0 (callers add the gamma regularizer), 0 < p_min <= budget/N.
+    """
+    a = jnp.asarray(a)
+    n = a.shape[0]
+
+    a_sorted = jnp.sort(a)
+    prefix = jnp.concatenate([jnp.zeros((1,), a.dtype), jnp.cumsum(a_sorted)])
+
+    def f_and_sets(s):
+        # |L| = #{a_i <= s*p_min}; |U| = #{a_i >= s}; middle sum via prefix.
+        n_lower = jnp.searchsorted(a_sorted, s * p_min, side="right")
+        n_not_upper = jnp.searchsorted(a_sorted, s, side="left")
+        n_upper = n - n_not_upper
+        c = prefix[n_not_upper] - prefix[n_lower]
+        f = n_upper + n_lower * p_min + c / s
+        return f, n_lower, n_upper, c
+
+    # Candidate breakpoints (strictly positive).
+    bps = jnp.sort(jnp.concatenate([a_sorted, a_sorted / p_min]))
+    f_at_bps = jax.vmap(lambda s: f_and_sets(s)[0])(bps)
+    # f_at_bps is non-increasing along bps.  Find the last breakpoint with
+    # f >= budget: the solution lies in [bps[j], bps[j+1]].
+    ge = f_at_bps >= budget
+    j = jnp.maximum(jnp.sum(ge) - 1, 0)
+    lo = bps[j]
+    hi = bps[jnp.minimum(j + 1, 2 * n - 1)]
+    s_probe = 0.5 * (lo + hi)
+    # Within the open segment the active sets are fixed; recover them at the
+    # midpoint and solve the closed form.
+    _, n_lower, n_upper, c = f_and_sets(s_probe)
+    z = budget - n_upper - n_lower * p_min
+    s_star = jnp.where(z > 0, c / jnp.maximum(z, 1e-30), lo)
+    # Degenerate: budget >= N -> everything saturates at 1.
+    p = jnp.clip(a / jnp.maximum(s_star, 1e-30), p_min, 1.0)
+    p = jnp.where(budget >= n, jnp.ones_like(p), p)
+    return p
+
+
+def isp_probabilities(
+    scores: jax.Array, budget: float | jax.Array, p_min: float | jax.Array = 0.0
+) -> jax.Array:
+    """Optimal independent-sampling probabilities (Lemma 2.2 / Lemma 5.1).
+
+    Args:
+      scores: non-negative per-client scores ``a_i`` (e.g. ``lambda_i*||g_i||``
+        for Lemma 2.2, ``sqrt(pi^2_{1:t-1}(i) + gamma)`` for the FTRL solution).
+      budget: expected cohort size ``K`` with ``0 < K <= N``.
+      p_min: probability floor (0 recovers Lemma 2.2; the paper requires
+        ``p_min <= K/(2N)`` in the analysis).
+
+    Returns:
+      p with ``p_min <= p_i <= 1`` and ``sum(p) == K`` (to float tolerance).
+    """
+    scores = jnp.asarray(scores)
+    n = scores.shape[0]
+    budget = jnp.asarray(budget, dtype=scores.dtype)
+    # A zero floor breaks the bisection bracket; use a tiny positive floor and
+    # rely on snapping (clients with a_i == 0 get p = floor ~ 0, matching the
+    # open-constraint solution p_i -> 0+).
+    eps_floor = jnp.asarray(1e-12, scores.dtype)
+    p_min_arr = jnp.maximum(jnp.asarray(p_min, dtype=scores.dtype), eps_floor)
+    # Strictly positive scores for the solver; zero-score clients sit at floor.
+    safe = jnp.maximum(scores, 1e-30)
+    p = _isp_solve(safe, budget, p_min_arr)
+    return p
+
+
+def rsp_probabilities(scores: jax.Array, budget: float | jax.Array) -> jax.Array:
+    """Optimal marginals for the random sampling procedure: K * a / sum(a).
+
+    Clipped to 1 with iterative mass redistribution so the result stays a
+    valid marginal vector when K * max(a) > sum(a)  (the paper assumes the
+    non-degenerate regime; production code must not produce p > 1).
+    """
+    scores = jnp.asarray(scores)
+    budget = jnp.asarray(budget, dtype=scores.dtype)
+
+    def body(_, p_and_free):
+        # redistribute: clients at cap 1 keep it; remaining budget spread
+        # proportionally over free clients.
+        p, _ = p_and_free
+        capped = p >= 1.0
+        k_rem = budget - jnp.sum(capped)
+        denom = jnp.sum(jnp.where(capped, 0.0, scores))
+        p_new = jnp.where(
+            capped, 1.0, k_rem * scores / jnp.maximum(denom, 1e-30)
+        )
+        return p_new, capped
+
+    total = jnp.maximum(jnp.sum(scores), 1e-30)
+    p0 = budget * scores / total
+    # N iterations suffice in the worst case; a handful in practice.
+    p, _ = jax.lax.fori_loop(
+        0, 8, body, (p0, jnp.zeros_like(p0, dtype=bool))
+    )
+    return jnp.clip(p, 0.0, 1.0)
+
+
+def mix_probabilities(p: jax.Array, theta: float | jax.Array, budget: float | jax.Array) -> jax.Array:
+    """Mixing strategy, eq. (12): p~ = (1-theta) p + theta * K/N."""
+    p = jnp.asarray(p)
+    n = p.shape[0]
+    theta = jnp.asarray(theta, p.dtype)
+    budget = jnp.asarray(budget, p.dtype)
+    return (1.0 - theta) * p + theta * budget / n
+
+
+def expected_cost(scores: jax.Array, p: jax.Array) -> jax.Array:
+    """Online cost l_t(p) = sum_i a_i^2 / p_i (Section 5.1)."""
+    scores = jnp.asarray(scores)
+    p = jnp.asarray(p)
+    return jnp.sum(jnp.where(scores > 0, scores**2 / jnp.maximum(p, 1e-30), 0.0))
+
+
+def optimal_cost(scores: jax.Array, budget: float | jax.Array) -> jax.Array:
+    """min_p l_t(p) over the ISP polytope — used by regret metrics.
+
+    Closed form when no p saturates: (sum a)^2 / K (eq. 39); in general we
+    evaluate the cost at the exact solver output.
+    """
+    p_star = isp_probabilities(scores, budget, p_min=0.0)
+    return expected_cost(scores, p_star)

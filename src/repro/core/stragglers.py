@@ -1,0 +1,40 @@
+"""Client availability / stragglers (paper Appendix E.1).
+
+In cross-device FL a subset A^t ~ q of clients is available each round
+(devices busy, offline, or slow).  The estimator stays unbiased by sampling
+only from A^t and importance-correcting with the availability probability:
+
+    d^t = sum_{i in S^t subseteq A^t} lambda_i g_i / (q_i p_i)
+
+``available_draw`` composes any base sampler's draw with an availability
+mask; ``availability_weights`` produces the corrected estimator weights.
+The sampler's own feedback update keeps using p~ (its sampling randomness);
+availability is exogenous.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.samplers import SampleResult
+
+__all__ = ["available_draw", "availability_weights"]
+
+
+def available_draw(draw: SampleResult, avail_mask: jax.Array) -> SampleResult:
+    """Restrict a draw to the available set A^t (exogenous Bernoulli(q))."""
+    mask = jnp.logical_and(draw.mask, avail_mask)
+    counts = jnp.where(avail_mask, draw.counts, 0)
+    return SampleResult(
+        mask=mask, counts=counts, marginals=draw.marginals, draw_probs=draw.draw_probs
+    )
+
+
+def availability_weights(
+    draw: SampleResult, lam: jax.Array, q: jax.Array, procedure: str, budget: int
+) -> jax.Array:
+    """Estimator weights with the 1/q availability correction."""
+    from repro.core.estimator import client_weights
+
+    w = client_weights(draw, lam, procedure, budget)
+    return w / jnp.maximum(jnp.asarray(q), 1e-30)

@@ -1,0 +1,11 @@
+from repro.data.partition import dirichlet_label_partition, power_law_sizes, size_share
+from repro.data.pipeline import FederatedDataset, synthetic_classification, synthetic_tokens
+
+__all__ = [
+    "dirichlet_label_partition",
+    "power_law_sizes",
+    "size_share",
+    "FederatedDataset",
+    "synthetic_classification",
+    "synthetic_tokens",
+]

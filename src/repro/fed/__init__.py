@@ -1,0 +1,15 @@
+from repro.fed.client import local_update, update_norm
+from repro.fed.server import FedConfig, History, run_federated
+from repro.fed.tasks import Task, logistic_regression, mlp_classifier, tiny_lm
+
+__all__ = [
+    "local_update",
+    "update_norm",
+    "FedConfig",
+    "History",
+    "run_federated",
+    "Task",
+    "logistic_regression",
+    "mlp_classifier",
+    "tiny_lm",
+]

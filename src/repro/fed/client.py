@@ -1,0 +1,46 @@
+"""Client-side local training (Algorithm 1 lines 5-10).
+
+``local_update`` runs R local SGD steps from the broadcast global params and
+returns the paper's client update g_i = x^{t,0} - x^{t,R} (NOT the negated
+direction: the server applies x <- x - eta_g * d with d the weighted average
+of these updates, so g is a descent direction scaled by eta_l).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["local_update"]
+
+
+def local_update(
+    params,
+    loss_fn: Callable,
+    batches,
+    local_lr: float,
+):
+    """Run R local SGD steps; batches is a pytree with leading axis R.
+
+    Returns (delta, final_loss) where delta = x^{t,0} - x^{t,R}.
+    """
+
+    def step(p, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(p, batch)
+        p = jax.tree_util.tree_map(
+            lambda w, g: w - local_lr * g.astype(w.dtype), p, grads
+        )
+        return p, loss
+
+    final, losses = jax.lax.scan(step, params, batches)
+    delta = jax.tree_util.tree_map(lambda a, b: a - b, params, final)
+    return delta, losses[-1]
+
+
+def update_norm(delta) -> jax.Array:
+    """||g_i|| over the flattened update pytree (float32 accumulation)."""
+    sq = jax.tree_util.tree_map(
+        lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), delta
+    )
+    return jnp.sqrt(jax.tree_util.tree_reduce(jnp.add, sq))

@@ -1,0 +1,152 @@
+"""Pod-scale federated round steps (the distributed Algorithm 1).
+
+Two cohort execution modes (DESIGN.md section 3):
+
+* client_parallel — cohort members vmapped across the batch ('data'/'pod')
+  mesh axes; per-client diverged params live concurrently (C copies, each
+  tensor-sharded over 'model').  Round latency ~= one client's local run.
+* cohort_sequential — lax.scan over cohort members; each member's batch is
+  itself data-parallel and params are FSDP-sharded over (batch x model)
+  axes; only ONE diverged copy + the accumulator exist at a time, which is
+  what lets llama3-405b / arctic-480b run true R-step local training.
+
+Both produce:
+  new_params  — x^{t+1} = x^t - eta_g * d^t with the unbiased ISP estimate
+                d^t = sum_c w_c * (x^t - x_c^{t,R}),  w_c = m_c lambda_c / p~_c
+  feedback    — pi_t(c) = ||delta_c||  (weights applied by the server, which
+                knows lambda; the norm rides the aggregation pass)
+  mean loss.
+
+The round consumes a *static padded cohort* of size C with the inclusion
+mask folded into w (w_c = 0 for padding) — ISP's stochastic |S^t| maps onto
+fixed TPU shapes this way (DESIGN.md section 6.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.common import ArchConfig
+
+__all__ = ["RoundSpec", "build_round_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundSpec:
+    cohort: int  # padded cohort size C
+    local_steps: int  # R
+    local_lr: float = 0.02
+    server_lr: float = 1.0
+
+
+def _tree_weighted_sum(deltas, w):
+    """sum_c w_c * delta_c over a stacked (C, ...) pytree."""
+    def one(leaf):
+        wc = w.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(wc * leaf.astype(jnp.float32), axis=0)
+
+    return jax.tree_util.tree_map(one, deltas)
+
+
+def _tree_sq_norm(delta):
+    sq = jax.tree_util.tree_map(
+        lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), delta
+    )
+    return jax.tree_util.tree_reduce(jnp.add, sq)
+
+
+def _local_train(params, cfg: ArchConfig, batches, lr: float):
+    """R local SGD steps on one client. batches: pytree with leading R axis.
+
+    Returns (delta = x0 - xR, last-step loss)."""
+
+    def step(p, batch):
+        loss, grads = jax.value_and_grad(lambda q: transformer.loss_fn(q, cfg, batch))(p)
+        p = jax.tree_util.tree_map(lambda w, g: w - lr * g.astype(w.dtype), p, grads)
+        return p, loss
+
+    final, losses = jax.lax.scan(step, params, batches)
+    delta = jax.tree_util.tree_map(lambda a, b: (a - b).astype(a.dtype), params, final)
+    return delta, losses[-1]
+
+
+def build_round_step(cfg: ArchConfig, spec: RoundSpec, constrain=None) -> Callable:
+    """Returns round_step(params, tokens, targets, weights[, aux_embeds]).
+
+    tokens/targets: (C, R, B_local, S) int32 — each cohort member's R local
+    batches.  aux_embeds (multimodal archs): (C, R, B_local, S_front, F).
+    weights: (C,) f32 — m_c * lambda_c / p~_c (zero for cohort padding).
+    constrain: optional fn(param-like pytree) -> pytree applying sharding
+    constraints — REQUIRED at scale for cohort_sequential so the f32
+    estimate accumulator stays FSDP-sharded instead of being replicated and
+    all-reduced every cohort step (EXPERIMENTS.md section Perf, qwen3 iter 1).
+    """
+    mode = cfg.round_mode
+    if constrain is None:
+        constrain = lambda tree: tree
+
+    def per_client(params, tok, tgt, aux):
+        batches = (tok, tgt) if aux is None else (tok, tgt, aux)
+        delta, loss = _local_train(params, cfg, batches, spec.local_lr)
+        return delta, loss, jnp.sqrt(_tree_sq_norm(delta))
+
+    if mode == "client_parallel":
+
+        def round_step(params, tokens, targets, weights, aux_embeds=None):
+            def one(tok, tgt, aux):
+                return per_client(params, tok, tgt, aux)
+
+            if aux_embeds is None:
+                deltas, losses, norms = jax.vmap(
+                    lambda tok, tgt: one(tok, tgt, None)
+                )(tokens, targets)
+            else:
+                deltas, losses, norms = jax.vmap(one)(tokens, targets, aux_embeds)
+            d = _tree_weighted_sum(deltas, weights)
+            new_params = jax.tree_util.tree_map(
+                lambda p, g: p - spec.server_lr * g.astype(p.dtype), params, d
+            )
+            return new_params, norms, jnp.mean(losses)
+
+        return round_step
+
+    if mode == "cohort_sequential":
+
+        def round_step(params, tokens, targets, weights, aux_embeds=None):
+            acc0 = constrain(
+                jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+            )
+
+            def body(acc, inp):
+                if aux_embeds is None:
+                    tok, tgt, w = inp
+                    aux = None
+                else:
+                    tok, tgt, w, aux = inp
+                delta, loss, norm = per_client(params, tok, tgt, aux)
+                delta = constrain(delta)
+                acc = jax.tree_util.tree_map(
+                    lambda a, dl: a + w * dl.astype(jnp.float32), acc, delta
+                )
+                return constrain(acc), (loss, norm)
+
+            xs = (
+                (tokens, targets, weights)
+                if aux_embeds is None
+                else (tokens, targets, weights, aux_embeds)
+            )
+            d, (losses, norms) = jax.lax.scan(body, acc0, xs)
+            new_params = jax.tree_util.tree_map(
+                lambda p, g: p - spec.server_lr * g.astype(p.dtype), params, d
+            )
+            return new_params, norms, jnp.mean(losses)
+
+        return round_step
+
+    raise ValueError(f"unknown round_mode {mode!r}")

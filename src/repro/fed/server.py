@@ -1,0 +1,169 @@
+"""Federated server loop (Algorithm 1) — simulation-scale driver.
+
+Two execution modes:
+
+* ``oracle_metrics=True``: every round computes *all* clients' local updates
+  (vmapped) so the paper's diagnostics — dynamic regret (eq. 8), estimator
+  variance (eq. 2), sampling quality — are exact.  This is how the paper's
+  figures are generated (the oracle is a property of the simulation, not of
+  the deployed server).
+* ``oracle_metrics=False``: only the sampled cohort computes (padded to a
+  static buffer), which is the deployable configuration; metrics are limited
+  to what a real server can observe.
+
+The pod-scale distributed round lives in ``repro.fed.round`` and
+``repro.launch`` — this module is the algorithmic reference loop and is what
+validates the paper's claims on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import estimator, samplers
+from repro.core.regret import RegretTracker
+from repro.fed import client as fed_client
+from repro.fed.tasks import Task
+from repro.optim.fedopt import FedAvgServer, ServerOptimizer
+
+__all__ = ["FedConfig", "History", "run_federated"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    rounds: int = 100
+    budget: int = 10
+    local_steps: int = 1
+    batch_size: int = 64
+    local_lr: float = 0.02
+    server_opt: ServerOptimizer = FedAvgServer(lr=1.0)
+    seed: int = 0
+    eval_every: int = 5
+    eval_batches: int = 4
+    oracle_metrics: bool = True
+
+
+@dataclasses.dataclass
+class History:
+    rounds: list = dataclasses.field(default_factory=list)
+    train_loss: list = dataclasses.field(default_factory=list)
+    test_accuracy: list = dataclasses.field(default_factory=list)
+    estimator_sq_error: list = dataclasses.field(default_factory=list)
+    cohort_size: list = dataclasses.field(default_factory=list)
+    regret: RegretTracker | None = None
+    wall_time_s: float = 0.0
+
+    def summary(self) -> dict:
+        out = {
+            "final_loss": self.train_loss[-1] if self.train_loss else None,
+            "final_acc": self.test_accuracy[-1] if self.test_accuracy else None,
+            "mean_sq_error": float(np.mean(self.estimator_sq_error))
+            if self.estimator_sq_error
+            else None,
+            "mean_cohort": float(np.mean(self.cohort_size)) if self.cohort_size else None,
+            "wall_time_s": self.wall_time_s,
+        }
+        if self.regret is not None and self.regret.costs:
+            out["final_dynamic_regret_per_round"] = float(
+                self.regret.dynamic_regret()[-1] / len(self.regret.costs)
+            )
+        return out
+
+
+def _all_client_round(task: Task, dataset, local_steps: int, batch_size: int, local_lr: float):
+    """Build the jitted all-clients local-update function (oracle mode)."""
+
+    lam = dataset.lam
+
+    @jax.jit
+    def round_fn(params, key):
+        n = dataset.n_clients
+        keys = jax.random.split(key, n * local_steps).reshape(n, local_steps, 2)
+
+        def one_client(i, ks):
+            def get_batch(k):
+                return dataset.client_batch(i, k, batch_size)
+
+            batches = jax.vmap(get_batch)(ks)
+            delta, loss = fed_client.local_update(params, task.loss, batches, local_lr)
+            return delta, loss, fed_client.update_norm(delta)
+
+        deltas, losses, norms = jax.vmap(one_client)(jnp.arange(dataset.n_clients), keys)
+        feedback = lam * norms  # pi_t(i) = lambda_i ||g_i||
+        return deltas, losses, feedback
+
+    return round_fn
+
+
+def run_federated(
+    task: Task,
+    dataset,
+    sampler: samplers.Sampler,
+    cfg: FedConfig,
+    eval_data: tuple | None = None,
+) -> History:
+    t0 = time.time()
+    key = jax.random.PRNGKey(cfg.seed)
+    key, init_key = jax.random.split(key)
+    params = task.init(init_key)
+    opt_state = cfg.server_opt.init(params)
+    s_state = sampler.init()
+    lam = dataset.lam
+
+    hist = History(regret=RegretTracker(budget=cfg.budget))
+    round_fn = _all_client_round(task, dataset, cfg.local_steps, cfg.batch_size, cfg.local_lr)
+
+    apply_fn = jax.jit(
+        lambda p, d, o: cfg.server_opt.apply(p, d, o), donate_argnums=(0,)
+    )
+
+    @jax.jit
+    def estimate_fn(deltas, weights, feedback_masked):
+        d = estimator.aggregate_stacked(deltas, weights)
+        return d
+
+    @jax.jit
+    def error_fn(deltas, weights):
+        d = estimator.aggregate_stacked(deltas, weights)
+        tgt = estimator.full_aggregate_stacked(deltas, lam)
+        return estimator.empirical_sq_error(d, tgt)
+
+    eval_fn = jax.jit(lambda p, b: task.accuracy(p, b))
+
+    for t in range(cfg.rounds):
+        key, k_data, k_sample = jax.random.split(key, 3)
+        deltas, losses, feedback_full = round_fn(params, k_data)
+
+        p_marg = sampler.probabilities(s_state)
+        draw = sampler.sample(s_state, k_sample)
+        weights = estimator.client_weights(draw, lam, sampler.procedure, sampler.budget)
+        d_est = estimate_fn(deltas, weights, feedback_full * draw.mask)
+        params, opt_state = apply_fn(params, d_est, opt_state)
+
+        # The server only observes sampled feedback (Theorem 5.2's partial
+        # feedback): mask before the sampler update.
+        s_state = sampler.update(s_state, draw, feedback_full * draw.mask)
+
+        # ---- diagnostics (oracle side) ----
+        if cfg.oracle_metrics:
+            if sampler.procedure == "isp":
+                p_eff = draw.marginals
+            else:
+                p_eff = sampler.budget * draw.draw_probs
+            hist.regret.record(feedback_full, p_eff)
+            hist.estimator_sq_error.append(float(error_fn(deltas, weights)))
+        hist.cohort_size.append(int(draw.size))
+        hist.rounds.append(t)
+        hist.train_loss.append(float(jnp.sum(lam * losses)))
+
+        if eval_data is not None and (t % cfg.eval_every == 0 or t == cfg.rounds - 1):
+            hist.test_accuracy.append(float(eval_fn(params, eval_data)))
+
+    hist.wall_time_s = time.time() - t0
+    return hist

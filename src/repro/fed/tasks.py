@@ -1,0 +1,146 @@
+"""Trainable tasks for the paper-scale federated experiments.
+
+Each task bundles: parameter init, a per-batch loss, and an accuracy metric.
+The large-architecture zoo (src/repro/models) plugs into the same interface
+through ``repro.fed.lm_task``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Task", "logistic_regression", "mlp_classifier", "tiny_lm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    name: str
+    init: Callable  # key -> params
+    loss: Callable  # (params, (x, y)) -> scalar
+    accuracy: Callable  # (params, (x, y)) -> scalar
+
+
+def _xent(logits, y):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def logistic_regression(dim: int = 60, n_classes: int = 10) -> Task:
+    """The paper's Section 6.1 model: f(x) = argmax(Wx + b)."""
+
+    def init(key):
+        kw, _ = jax.random.split(key)
+        return {
+            "w": jax.random.normal(kw, (dim, n_classes)) * 0.01,
+            "b": jnp.zeros((n_classes,)),
+        }
+
+    def loss(params, batch):
+        x, y = batch
+        logits = x @ params["w"] + params["b"]
+        return _xent(logits, y)
+
+    def accuracy(params, batch):
+        x, y = batch
+        logits = x @ params["w"] + params["b"]
+        return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+    return Task("logreg", init, loss, accuracy)
+
+
+def mlp_classifier(dim: int, n_classes: int, hidden: int = 128, depth: int = 2) -> Task:
+    """Stand-in for the paper's FEMNIST CNN at CPU-simulation scale."""
+
+    def init(key):
+        keys = jax.random.split(key, depth + 1)
+        sizes = [dim] + [hidden] * depth + [n_classes]
+        return {
+            f"l{i}": {
+                "w": jax.random.normal(keys[i], (sizes[i], sizes[i + 1]))
+                * jnp.sqrt(2.0 / sizes[i]),
+                "b": jnp.zeros((sizes[i + 1],)),
+            }
+            for i in range(depth + 1)
+        }
+
+    def forward(params, x):
+        h = x
+        n_layers = len(params)
+        for i in range(n_layers):
+            h = h @ params[f"l{i}"]["w"] + params[f"l{i}"]["b"]
+            if i < n_layers - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    def loss(params, batch):
+        x, y = batch
+        return _xent(forward(params, x), y)
+
+    def accuracy(params, batch):
+        x, y = batch
+        return jnp.mean((jnp.argmax(forward(params, x), -1) == y).astype(jnp.float32))
+
+    return Task("mlp", init, loss, accuracy)
+
+
+def tiny_lm(vocab: int = 256, d_model: int = 64, n_layers: int = 2, n_heads: int = 4) -> Task:
+    """Miniature decoder LM for the Section 6.3-style federated text task.
+
+    Pure-jnp causal transformer (the full zoo lives in repro.models; this one
+    keeps the paper-faithful experiment self-contained and CPU-fast).
+    """
+
+    def init(key):
+        ks = jax.random.split(key, 2 + 4 * n_layers)
+        d_ff = 4 * d_model
+        params = {
+            "emb": jax.random.normal(ks[0], (vocab, d_model)) * 0.02,
+        }
+        for i in range(n_layers):
+            params[f"blk{i}"] = {
+                "qkv": jax.random.normal(ks[2 + 4 * i], (d_model, 3 * d_model)) * 0.02,
+                "proj": jax.random.normal(ks[3 + 4 * i], (d_model, d_model)) * 0.02,
+                "up": jax.random.normal(ks[4 + 4 * i], (d_model, d_ff)) * 0.02,
+                "down": jax.random.normal(ks[5 + 4 * i], (d_ff, d_model)) * 0.02,
+            }
+        return params
+
+    head_dim = d_model // n_heads
+
+    def forward(params, tokens):
+        b, s = tokens.shape
+        h = params["emb"][tokens]
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        for i in range(n_layers):
+            blk = params[f"blk{i}"]
+            x = h * jax.lax.rsqrt(jnp.mean(h * h, -1, keepdims=True) + 1e-6)
+            qkv = x @ blk["qkv"]
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+            q = q.reshape(b, s, n_heads, head_dim)
+            k = k.reshape(b, s, n_heads, head_dim)
+            v = v.reshape(b, s, n_heads, head_dim)
+            att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(head_dim)
+            att = jnp.where(mask[None, None], att, -1e9)
+            att = jax.nn.softmax(att, axis=-1)
+            o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, d_model)
+            h = h + o @ blk["proj"]
+            x = h * jax.lax.rsqrt(jnp.mean(h * h, -1, keepdims=True) + 1e-6)
+            h = h + jax.nn.gelu(x @ blk["up"]) @ blk["down"]
+        x = h * jax.lax.rsqrt(jnp.mean(h * h, -1, keepdims=True) + 1e-6)
+        return x @ params["emb"].T
+
+    def loss(params, batch):
+        tokens, targets = batch
+        logits = forward(params, tokens)
+        return _xent(logits, targets)
+
+    def accuracy(params, batch):
+        tokens, targets = batch
+        logits = forward(params, tokens)
+        return jnp.mean((jnp.argmax(logits, -1) == targets).astype(jnp.float32))
+
+    return Task("tiny_lm", init, loss, accuracy)

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the compute hot-spots (DESIGN.md section 5).
+
+Each kernel ships three artifacts: the pl.pallas_call implementation with
+explicit BlockSpec VMEM tiling (<name>.py), a jit'd wrapper (ops.py), and a
+pure-jnp oracle (ref.py).  CPU CI validates with interpret=True.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_weighted_agg import fused_weighted_agg
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.ssd_scan import ssd_scan
+
+__all__ = [
+    "ops",
+    "ref",
+    "flash_attention",
+    "fused_weighted_agg",
+    "rmsnorm",
+    "ssd_scan",
+]

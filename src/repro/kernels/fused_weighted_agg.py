@@ -1,0 +1,78 @@
+"""Fused ISP-weighted aggregation + feedback norms — the paper's server hot loop.
+
+Algorithm 1 lines 12+14 need, per round, BOTH the global estimate
+``d = sum_i (m_i lambda_i / p_i) g_i`` AND the per-client feedback
+``pi_i^2 = ||g_i||^2``.  Done naively that is two full HBM passes over the
+stacked client updates (the largest tensor the server touches).  This kernel
+produces both in ONE pass:
+
+  grid = (n_chunks,)                 chunks over the flattened param dim
+  g block   (C, BD)  VMEM            stacked client-update chunk
+  w block   (C, 1)   VMEM            estimator weights (m lambda / p)
+  d out     (1, BD)                  weighted aggregate chunk
+  sq scratch (C, 128) f32            per-client partial squared norms,
+                                     accumulated across chunks, emitted last
+
+Oracle: ref.weighted_agg_reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fused_weighted_agg"]
+
+
+def _kernel(g_ref, w_ref, d_ref, sq_ref, acc_ref, *, n_chunks):
+    ic = pl.program_id(0)
+
+    @pl.when(ic == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = g_ref[...].astype(jnp.float32)  # (C, BD)
+    w = w_ref[...].astype(jnp.float32)  # (C, 1)
+    d_ref[0, ...] = jnp.sum(g * w, axis=0).astype(d_ref.dtype)
+    acc_ref[:, 0] += jnp.sum(g * g, axis=1)
+
+    @pl.when(ic == n_chunks - 1)
+    def _done():
+        sq_ref[...] = acc_ref[:, :1]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def fused_weighted_agg(
+    g: jax.Array, w: jax.Array, *, block_d: int = 2048, interpret: bool = False
+):
+    """g (C, D) stacked flattened client updates; w (C,) weights.
+
+    Returns (d (D,) f32, sq_norms (C,) f32) in a single HBM pass over g.
+    """
+    c, d = g.shape
+    bd = min(block_d, d)
+    assert d % bd == 0, (d, bd)
+    n_chunks = d // bd
+    kernel = functools.partial(_kernel, n_chunks=n_chunks)
+    d_out, sq = pl.pallas_call(
+        kernel,
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((c, bd), lambda ic: (0, ic)),
+            pl.BlockSpec((c, 1), lambda ic: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bd), lambda ic: (0, ic)),
+            pl.BlockSpec((c, 1), lambda ic: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, d), jnp.float32),
+            jax.ShapeDtypeStruct((c, 1), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((c, 128), jnp.float32)],
+        interpret=interpret,
+    )(g, w[:, None])
+    return d_out[0], sq[:, 0]

@@ -1,0 +1,138 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On a TPU backend the kernels run compiled; on CPU (this container) they run
+in ``interpret=True`` mode, which executes the kernel body with JAX ops —
+bit-for-bit the same program logic, validated against the ``ref`` oracles by
+the test suite.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.fused_weighted_agg import fused_weighted_agg as _agg
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+__all__ = [
+    "flash_attention",
+    "ssd_scan",
+    "fused_weighted_agg",
+    "rmsnorm",
+    "aggregate_cohort_updates",
+]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, **kw):
+    return _flash(q, k, v, interpret=_interpret(), **kw)
+
+
+def ssd_scan(x, da, b, c, **kw):
+    return _ssd(x, da, b, c, interpret=_interpret(), **kw)
+
+
+def fused_weighted_agg(g, w, **kw):
+    return _agg(g, w, interpret=_interpret(), **kw)
+
+
+def rmsnorm(x, scale, **kw):
+    return _rmsnorm(x, scale, interpret=_interpret(), **kw)
+
+
+def aggregate_cohort_updates(stacked_deltas, weights, *, block_d: int = 2048):
+    """Pytree-level driver for the fused kernel: flattens a stacked client
+    update pytree (leading client axis), runs one fused pass, and returns
+    (delta_pytree, sq_norms (C,)).
+
+    This is the deployable server aggregation path (Algorithm 1 lines 12+14
+    in one HBM traversal).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(stacked_deltas)
+    c = leaves[0].shape[0]
+    flat = jnp.concatenate([l.reshape(c, -1) for l in leaves], axis=1)
+    d_total = flat.shape[1]
+    pad = (-d_total) % block_d
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    d_flat, sq = fused_weighted_agg(flat, weights, block_d=block_d)
+    if pad:
+        d_flat = d_flat[:-pad]
+    out_leaves = []
+    off = 0
+    for l in leaves:
+        n = int(np_prod(l.shape[1:]))
+        out_leaves.append(d_flat[off : off + n].reshape(l.shape[1:]).astype(l.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out_leaves), sq
+
+
+def np_prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# training-usable flash attention: Pallas forward + analytic recompute bwd
+# ---------------------------------------------------------------------------
+
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention_trainable(q, k, v, causal=True, window=None, softcap=None):
+    """Flash-attention with a custom VJP: forward runs the Pallas kernel
+    (O(S) memory — no S x S probabilities stored); backward recomputes
+    attention blockwise from (q, k, v, out) with the standard analytic
+    gradient.  This is the kernel the train path uses on TPU; CPU CI
+    validates it against jax.grad of the jnp oracle."""
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  interpret=_interpret())
+
+
+def _fa_fwd(q, k, v, causal, window, softcap):
+    out = _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                 interpret=_interpret())
+    return out, (q, k, v, out)
+
+
+def _fa_bwd(causal, window, softcap, res, d_out):
+    q, k, v, out = res
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    do = d_out.astype(jnp.float32)
+    scale = q.shape[-1] ** -0.5
+    s_raw = jnp.einsum("hqd,hkd->hqk", qf, kf) * scale
+    if softcap is not None:
+        s_capped = softcap * jnp.tanh(s_raw / softcap)
+    else:
+        s_capped = s_raw
+    s_q, s_k = q.shape[1], k.shape[1]
+    qpos = jnp.arange(s_q)[:, None]
+    kpos = jnp.arange(s_k)[None, :]
+    mask = jnp.ones((s_q, s_k), bool)
+    if causal:
+        mask = kpos <= qpos
+    if window is not None:
+        mask = jnp.logical_and(mask, kpos > qpos - window)
+    logits = jnp.where(mask[None], s_capped, -2.3819763e38)
+    p = jax.nn.softmax(logits, axis=-1)
+    dv = jnp.einsum("hqk,hqd->hkd", p, do)
+    dp = jnp.einsum("hqd,hkd->hqk", do, vf)
+    d_rows = jnp.sum(do * out.astype(jnp.float32), axis=-1, keepdims=True)
+    ds = p * (dp - d_rows)  # grad wrt (masked, capped) logits
+    if softcap is not None:
+        ds = ds * (1.0 - jnp.tanh(s_raw / softcap) ** 2)  # through the cap
+    ds = jnp.where(mask[None], ds, 0.0)
+    dq = jnp.einsum("hqk,hkd->hqd", ds, kf) * scale
+    dk = jnp.einsum("hqk,hqd->hkd", ds, qf) * scale
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_trainable.defvjp(_fa_fwd, _fa_bwd)

@@ -1,0 +1,91 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors a kernel in this package 1:1; the test suite sweeps
+shapes/dtypes and asserts allclose between kernel (interpret=True on CPU)
+and oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "mha_reference",
+    "ssd_reference",
+    "weighted_agg_reference",
+    "rmsnorm_reference",
+]
+
+
+def mha_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+) -> jax.Array:
+    """q,k,v: (H, S, hd) single collapsed batch*head leading dim."""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    s_q, s_k = q.shape[1], k.shape[1]
+    qpos = jnp.arange(s_q)[:, None]
+    kpos = jnp.arange(s_k)[None, :]
+    mask = jnp.ones((s_q, s_k), bool)
+    if causal:
+        mask = kpos <= qpos
+    if window is not None:
+        mask = jnp.logical_and(mask, kpos > qpos - window)
+    logits = jnp.where(mask[None], logits, -2.3819763e38)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", probs, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_reference(x, da, b, c):
+    """Sequential SSD recurrence (the definitionally-correct scan).
+
+    x  (B, S, hd)  dt-weighted inputs for ONE head
+    da (B, S)      per-step log decay (negative)
+    b  (B, S, N)   input projections
+    c  (B, S, N)   output projections
+    Returns y (B, S, hd), final state (B, hd, N).
+    """
+
+    def step(h, inp):
+        x_t, da_t, b_t, c_t = inp
+        h = h * jnp.exp(da_t)[:, None, None] + x_t[..., :, None] * b_t[..., None, :]
+        y_t = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y_t
+
+    bsz, s, hd = x.shape
+    n = b.shape[-1]
+    h0 = jnp.zeros((bsz, hd, n), jnp.float32)
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(da.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(c.astype(jnp.float32), 1, 0),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h
+
+
+def weighted_agg_reference(g: jax.Array, w: jax.Array):
+    """g (C, D) stacked client updates; w (C,) estimator weights.
+
+    Returns (d (D,), sq_norms (C,)) — the ISP-weighted aggregate and the
+    per-client squared update norms (the K-Vib feedback), both in f32.
+    """
+    gf = g.astype(jnp.float32)
+    d = jnp.einsum("c,cd->d", w.astype(jnp.float32), gf)
+    sq = jnp.sum(gf * gf, axis=1)
+    return d, sq
+
+
+def rmsnorm_reference(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)

@@ -1,0 +1,6 @@
+"""Launchers.  NOTE: repro.launch.dryrun must run as its own process
+(python -m repro.launch.dryrun) — it forces the host-device count before jax
+init.  Importing this package does NOT import dryrun for that reason."""
+from repro.launch.mesh import batch_axes, fsdp_axes, make_production_mesh
+
+__all__ = ["batch_axes", "fsdp_axes", "make_production_mesh"]

@@ -1,0 +1,33 @@
+"""Production meshes (TPU v5e pods).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; the dry-run entrypoint sets XLA_FLAGS *before* any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "fsdp_axes", "batch_axes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import os
+
+    override = os.environ.get("REPRO_MESH_SHAPE")  # e.g. "4,4" or "2,4,4" (CI)
+    if override:
+        shape = tuple(int(x) for x in override.split(","))
+        axes = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+        return jax.make_mesh(shape, axes)
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes carrying the batch/client dimension."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def fsdp_axes(mesh) -> tuple:
+    """Mesh axes over which fully-sharded parameters are scattered."""
+    return batch_axes(mesh)

@@ -1,0 +1,155 @@
+"""Parameter / input / cache sharding assignment for the production meshes.
+
+Param specs are assigned by leaf *name* (the pytree key carries the role):
+expanding projections shard their output-features over `model`, contracting
+projections their input-features; MoE expert stacks shard the expert axis;
+FSDP mode additionally scatters the d_model-ish axis over the batch axes
+(('data',) single-pod, ('pod','data') multi-pod).  Anything non-divisible or
+unknown stays replicated — GSPMD correctness never depends on these hints,
+only efficiency does.
+
+Cache specs are heuristic by shape: the sequence axis (== max_seq) shards
+over the kv_seq axes, the batch axis over the batch axes, otherwise the
+largest mesh-divisible trailing dim goes to `model`.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes, fsdp_axes
+
+__all__ = ["param_specs", "param_shardings", "cache_shardings", "activation_rules"]
+
+# leaf-name -> role
+_EXPAND = {"wq", "wk", "wv", "up", "gate", "in_proj", "w_in", "ffn_up", "ffn_gate", "w_if", "qkv"}
+_CONTRACT = {"wo", "down", "out_proj", "ffn_down"}
+_MOE_IN = {"w_gate", "w_up"}  # (L, E, d, f)
+_MOE_OUT = {"w_down"}  # (L, E, f, d)
+
+
+def _divides(n: int, axes: tuple, mesh) -> bool:
+    size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    return n % size == 0 and n >= size
+
+
+def _spec_for(name: str, shape: tuple, mesh, fsdp: bool) -> P:
+    model = "model"
+    fs = fsdp_axes(mesh) if fsdp else None
+    nd = len(shape)
+
+    def pad(trailing: tuple) -> P:
+        return P(*((None,) * (nd - len(trailing)) + trailing))
+
+    if name == "embed" and nd == 2:
+        vocab_ok = _divides(shape[0], ("model",), mesh)
+        d_ok = fs is not None and _divides(shape[1], fs, mesh)
+        return P(model if vocab_ok else None, fs if d_ok else None)
+    if name == "lm_head" and nd == 2:
+        d_ok = fs is not None and _divides(shape[0], fs, mesh)
+        vocab_ok = _divides(shape[1], ("model",), mesh)
+        return P(fs if d_ok else None, model if vocab_ok else None)
+    if name in _MOE_IN and nd >= 3:
+        e_ok = _divides(shape[-3], ("model",), mesh)
+        d_ok = fs is not None and _divides(shape[-2], fs, mesh)
+        return pad((model if e_ok else None, fs if d_ok else None, None))
+    if name in _MOE_OUT and nd >= 3:
+        e_ok = _divides(shape[-3], ("model",), mesh)
+        d_ok = fs is not None and _divides(shape[-1], fs, mesh)
+        return pad((model if e_ok else None, None, fs if d_ok else None))
+    if name == "router" and nd >= 2:
+        return pad((None, model if _divides(shape[-1], ("model",), mesh) else None))
+    if name in _EXPAND and nd >= 2:
+        out_ok = _divides(shape[-1], ("model",), mesh)
+        in_ok = fs is not None and _divides(shape[-2], fs, mesh)
+        return pad((fs if in_ok else None, model if out_ok else None))
+    if name in _CONTRACT and nd >= 2:
+        in_ok = _divides(shape[-2], ("model",), mesh)
+        out_ok = fs is not None and _divides(shape[-1], fs, mesh)
+        return pad((model if in_ok else None, fs if out_ok else None))
+    if name == "conv_w" and nd >= 2:
+        return pad((model if _divides(shape[-1], ("model",), mesh) else None,))
+    # norms, biases, scalars, pos embeddings, small recurrent mats: replicated
+    return P()
+
+
+def param_specs(params, mesh, fsdp: bool):
+    """Pytree of PartitionSpecs mirroring `params` (works on shapes too)."""
+
+    def assign(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        return _spec_for(name or "", tuple(leaf.shape), mesh, fsdp)
+
+    return jax.tree_util.tree_map_with_path(assign, params)
+
+
+def param_shardings(params, mesh, fsdp: bool):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), param_specs(params, mesh, fsdp)
+    )
+
+
+def cache_shardings(caches, mesh, max_seq: int, batch: int):
+    """Heuristic decode-cache shardings (see module docstring)."""
+    b_axes = batch_axes(mesh)
+    b_size = int(np.prod([mesh.shape[a] for a in b_axes]))
+    m_size = mesh.shape["model"]
+
+    def assign(leaf):
+        shape = tuple(leaf.shape)
+        spec: list = [None] * len(shape)
+        used_model = used_batch = False
+        # dim 0 is the pattern-repeat stack: never sharded.
+        for i, s in enumerate(shape):
+            if i == 0:
+                continue
+            if s == max_seq and not used_model:
+                # the long axis: kv_seq -> model (+ batch axes when batch==1)
+                if batch == 1 and s % (b_size * m_size) == 0:
+                    spec[i] = b_axes + ("model",)
+                elif s % m_size == 0:
+                    spec[i] = "model"
+                used_model = True
+            elif s == batch and not used_batch and batch % b_size == 0:
+                spec[i] = b_axes
+                used_batch = True
+        # if the long axis didn't claim `model`, give it to the largest
+        # divisible unassigned trailing dim (SSM head/state axes etc.)
+        if not used_model:
+            cand = [
+                (s, i)
+                for i, s in enumerate(shape)
+                if i > 0 and spec[i] is None and s % m_size == 0
+            ]
+            if cand:
+                _, i = max(cand)
+                spec[i] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(assign, caches)
+
+
+def activation_rules(mesh, *, long_context: bool = False, client_parallel: bool = False) -> dict:
+    b_axes = batch_axes(mesh)
+    rules = {
+        # client_parallel vmaps the model over the cohort: the *client* dim
+        # carries the batch axes and the inner per-client batch must stay
+        # unconstrained or it fights GSPMD propagation across the vmap.
+        "batch": None if client_parallel else b_axes,
+        "clients": b_axes,
+        "heads": ("model",),
+        "kv_heads": None,  # kv head counts are small (4-16); keep replicated
+        "ffn": ("model",),
+        "experts": ("model",),
+        "vocab": ("model",),
+        "embed": None,
+        "seq": None,
+        "kv_seq": b_axes + ("model",) if long_context else ("model",),
+        "state": ("model",),
+    }
+    return rules

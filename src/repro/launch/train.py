@@ -1,0 +1,143 @@
+"""End-to-end federated training driver: any zoo architecture x any sampler.
+
+On a TPU slice this launches the production mesh; on CPU it runs the same
+code path with a 1-device mesh and (typically) --reduced configs, e.g.:
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
+      --rounds 8 --clients 32 --budget 6 --sampler kvib --seq 64 --ckpt /tmp/fl
+
+The driver is the deployable realization of Algorithm 1:
+  host: sampler state, ISP draw, cohort padding, probabilities (K-Vib solver)
+  device: the jitted federated round step (local SGD + weighted aggregation
+          + feedback norms in one program)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config
+from repro.core import estimator, make_sampler
+from repro.data import synthetic_tokens
+from repro.fed.round import RoundSpec, build_round_step
+from repro.models import transformer
+
+
+def make_host_mesh():
+    n = len(jax.devices())
+    model = 1
+    for cand in (16, 8, 4, 2, 1):
+        if n % cand == 0:
+            model = cand
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--sampler", default="kvib")
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--clients", type=int, default=32)
+    ap.add_argument("--budget", type=int, default=6)
+    ap.add_argument("--cohort", type=int, default=8, help="padded cohort buffer C")
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--local-batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--local-lr", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    key = jax.random.PRNGKey(args.seed)
+    ds = synthetic_tokens(
+        n_clients=args.clients, seq_len=args.seq, vocab=cfg.vocab,
+        total_seqs=max(32 * args.clients, 512), seed=args.seed,
+    )
+    lam = np.asarray(ds.lam)
+
+    params = transformer.init_params(cfg, key)
+    n_params = transformer.param_count(params)
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M clients={args.clients} "
+          f"K={args.budget} cohort={args.cohort} sampler={args.sampler}")
+
+    sampler = make_sampler(
+        args.sampler, n=args.clients, budget=args.budget,
+        **({"horizon": args.rounds} if args.sampler in ("kvib", "vrb") else {}),
+    )
+    s_state = sampler.init()
+
+    spec = RoundSpec(cohort=args.cohort, local_steps=args.local_steps, local_lr=args.local_lr)
+    round_step = jax.jit(build_round_step(cfg, spec), donate_argnums=(0,))
+
+    rng = np.random.default_rng(args.seed)
+    dropped_total = 0
+    for t in range(args.rounds):
+        t0 = time.time()
+        key, k_draw, k_data = jax.random.split(key, 3)
+        draw = sampler.sample(s_state, k_draw)
+        w_full = np.asarray(
+            estimator.client_weights(draw, jnp.asarray(lam), sampler.procedure, sampler.budget)
+        )
+        included = np.flatnonzero(w_full > 0)
+        if len(included) > args.cohort:
+            # overflow beyond the padded buffer: resample the cohort slots
+            # uniformly among included (logged; bias-free under the
+            # conditional-acceptance scheme of DESIGN.md section 6.1)
+            dropped_total += len(included) - args.cohort
+            included = rng.choice(included, size=args.cohort, replace=False)
+        cohort_ids = np.zeros(args.cohort, np.int64)
+        cohort_w = np.zeros(args.cohort, np.float32)
+        cohort_ids[: len(included)] = included
+        cohort_w[: len(included)] = w_full[included]
+
+        # gather cohort batches (C, R, B, S)
+        toks, tgts = [], []
+        for cid in cohort_ids:
+            kk = jax.random.fold_in(k_data, int(cid))
+            keys = jax.random.split(kk, args.local_steps)
+            tt = [ds.client_batch(int(cid), kr, args.local_batch) for kr in keys]
+            toks.append(jnp.stack([a for a, _ in tt]))
+            tgts.append(jnp.stack([b for _, b in tt]))
+        tokens = jnp.stack(toks)
+        targets = jnp.stack(tgts)
+
+        params, norms, loss = round_step(params, tokens, targets, jnp.asarray(cohort_w))
+
+        # feedback: pi_t(i) = lambda_i ||g_i|| for the sampled clients
+        fb = np.zeros(args.clients, np.float32)
+        fb[cohort_ids[: len(included)]] = (
+            lam[cohort_ids[: len(included)]] * np.asarray(norms)[: len(included)]
+        )
+        s_state = sampler.update(s_state, draw, jnp.asarray(fb))
+
+        print(
+            f"round {t:>3} loss={float(loss):.4f} cohort={len(included)} "
+            f"p[min/max]={float(jnp.min(sampler.probabilities(s_state))):.3f}/"
+            f"{float(jnp.max(sampler.probabilities(s_state))):.3f} "
+            f"({time.time()-t0:.1f}s)"
+        )
+        if args.ckpt and args.ckpt_every and (t + 1) % args.ckpt_every == 0:
+            f = save_checkpoint(f"{args.ckpt}_r{t+1}", {"params": params, "sampler": s_state})
+            print("  checkpoint ->", f)
+
+    if dropped_total:
+        print(f"cohort overflow drops: {dropped_total}")
+    if args.ckpt:
+        f = save_checkpoint(args.ckpt, {"params": params, "sampler": s_state})
+        print("final checkpoint ->", f)
+
+
+if __name__ == "__main__":
+    main()

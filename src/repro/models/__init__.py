@@ -1,0 +1,29 @@
+from repro.models import attention, mlp, moe, sharding, ssm, transformer, xlstm
+from repro.models.common import ArchConfig
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_caches,
+    init_params,
+    loss_fn,
+    param_count,
+    prefill,
+)
+
+__all__ = [
+    "attention",
+    "mlp",
+    "moe",
+    "sharding",
+    "ssm",
+    "transformer",
+    "xlstm",
+    "ArchConfig",
+    "decode_step",
+    "forward",
+    "init_caches",
+    "init_params",
+    "loss_fn",
+    "param_count",
+    "prefill",
+]

@@ -1,0 +1,35 @@
+"""Gated / plain MLP blocks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, uniform_init
+from repro.models.sharding import shard
+
+__all__ = ["init_mlp", "mlp"]
+
+_ACT = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def init_mlp(cfg: ArchConfig, key: jax.Array, d_ff: int | None = None, gated: bool = True) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "up": uniform_init(ks[0], (cfg.d_model, d_ff), cfg.param_dtype),
+        "down": uniform_init(ks[1], (d_ff, cfg.d_model), cfg.param_dtype),
+    }
+    if gated:
+        p["gate"] = uniform_init(ks[2], (cfg.d_model, d_ff), cfg.param_dtype)
+    return p
+
+
+def mlp(params: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    act = _ACT[cfg.act]
+    h = x @ params["up"]
+    if "gate" in params:
+        h = h * act(x @ params["gate"])
+    else:
+        h = act(h)
+    h = shard(h, "batch", "seq", "ffn")
+    return h @ params["down"]

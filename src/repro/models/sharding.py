@@ -1,0 +1,70 @@
+"""Logical-axis sharding annotations for model code.
+
+Model forward functions annotate intermediates with *logical* axis names
+(``shard(x, "batch", "seq", "heads", None)``).  Outside a mesh context this is
+a no-op (CPU smoke tests); inside ``use_rules`` the names map to mesh axes and
+become ``with_sharding_constraint``s that steer GSPMD on the production mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["shard", "use_rules", "DEFAULT_RULES", "current_mesh"]
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("shard_rules", default=None)
+
+# logical axis -> mesh axis (or tuple of mesh axes). Overridden per-mesh in
+# launch/sharding.py; these defaults match the single-pod (data, model) mesh.
+DEFAULT_RULES = {
+    "batch": ("data",),
+    "clients": ("data",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ffn": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+    "embed": None,
+    "seq": None,
+    "kv_seq": ("model",),  # decode-time KV cache sequence sharding
+    "state": ("model",),  # SSM recurrent state heads
+}
+
+
+@contextlib.contextmanager
+def use_rules(mesh, rules: dict | None = None):
+    token = _CTX.set((mesh, dict(DEFAULT_RULES, **(rules or {}))))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def current_mesh():
+    ctx = _CTX.get()
+    return None if ctx is None else ctx[0]
+
+
+def shard(x: jax.Array, *logical_axes):
+    """Constrain `x` so logical_axes[i] governs dimension i (None = replicated)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    assert len(logical_axes) == x.ndim, (logical_axes, x.shape)
+    mesh_axes = []
+    used: set = set()
+    for name in logical_axes:
+        axes = None if name is None else rules.get(name)
+        if axes is not None:
+            flat = (axes,) if isinstance(axes, str) else tuple(axes)
+            # a mesh axis can shard at most one dim: first logical axis wins
+            if any(a in used for a in flat):
+                axes = None
+            else:
+                used.update(flat)
+        mesh_axes.append(axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*mesh_axes)))

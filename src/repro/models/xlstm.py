@@ -1,0 +1,348 @@
+"""xLSTM blocks (Beck et al. 2024, arXiv:2405.04517): sLSTM and mLSTM.
+
+mLSTM: matrix-memory cell C (hd x hd) with exponential input gate and
+stabilizer state m — a gated linear-attention recurrence; parallelizable over
+sequence (we use a scan over time; the recurrence state is O(1), which is why
+xlstm runs the long_500k decode shape).
+
+sLSTM: scalar-memory cell with hidden-to-gate recurrence (block-diagonal per
+head) — inherently sequential; scanned.
+
+Both blocks carry their own projections (the config's d_ff = 0): the mLSTM
+block up-projects by 2x with a gated residual; the sLSTM block is followed by
+a 4/3-factor gated FFN, matching the reference architecture.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, rms_norm, uniform_init
+from repro.models.sharding import shard
+
+__all__ = [
+    "mlstm_chunked",
+    "init_mlstm",
+    "mlstm_block",
+    "init_mlstm_state",
+    "mlstm_decode_step",
+    "init_slstm",
+    "slstm_block",
+    "init_slstm_state",
+    "slstm_decode_step",
+]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(cfg: ArchConfig, key: jax.Array) -> dict:
+    d = cfg.d_model
+    d_in = 2 * d  # projection factor 2
+    hd = d_in // cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up": uniform_init(ks[0], (d, 2 * d_in), cfg.param_dtype),  # -> [x, z]
+        "conv_w": uniform_init(ks[1], (cfg.conv_width, d_in), cfg.param_dtype, scale=0.5),
+        "wq": uniform_init(ks[2], (d_in, d_in), cfg.param_dtype),
+        "wk": uniform_init(ks[3], (d_in, d_in), cfg.param_dtype),
+        "wv": uniform_init(ks[4], (d_in, d_in), cfg.param_dtype),
+        "w_if": uniform_init(ks[5], (d_in, 2 * cfg.n_heads), cfg.param_dtype),
+        "if_bias": jnp.zeros((2 * cfg.n_heads,), jnp.float32),
+        "norm_scale": jnp.zeros((d_in,), cfg.param_dtype),
+        "down": uniform_init(ks[6], (d_in, d), cfg.param_dtype),
+    }
+
+
+def _mlstm_cell(q, k, v, i_gate, f_gate):
+    """Stabilized mLSTM recurrence.
+
+    q,k,v (B,S,H,hd); gates (B,S,H) pre-activation.
+    Returns h (B,S,H,hd).
+    """
+    bsz, s, h, hd = q.shape
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))  # (B,S,H)
+    logi = i_gate.astype(jnp.float32)
+
+    def step(carry, inp):
+        c, n, m = carry  # (B,H,hd,hd), (B,H,hd), (B,H)
+        q_t, k_t, v_t, lf, li = inp
+        m_new = jnp.maximum(lf + m, li)
+        f_s = jnp.exp(lf + m - m_new)[..., None]  # (B,H,1)
+        i_s = jnp.exp(li - m_new)[..., None]
+        c = c * f_s[..., None] + i_s[..., None] * (
+            v_t[..., :, None] * k_t[..., None, :]
+        )  # v k^T
+        n = n * f_s + i_s * k_t
+        denom = jnp.maximum(
+            jnp.abs(jnp.sum(n * q_t, axis=-1, keepdims=True)), jnp.exp(-m_new)[..., None]
+        )
+        h_t = jnp.einsum("bhvk,bhk->bhv", c, q_t) / denom
+        return (c, n, m_new), h_t
+
+    scale = hd**-0.5
+    xs = (
+        jnp.moveaxis(q.astype(jnp.float32) * scale, 1, 0),
+        jnp.moveaxis(k.astype(jnp.float32) * scale, 1, 0),
+        jnp.moveaxis(v.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(logf, 1, 0),
+        jnp.moveaxis(logi, 1, 0),
+    )
+    init = (
+        jnp.zeros((bsz, h, hd, hd), jnp.float32),
+        jnp.zeros((bsz, h, hd), jnp.float32),
+        jnp.full((bsz, h), -jnp.inf, jnp.float32),
+    )
+    _, hs = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(hs, 0, 1)  # (B,S,H,hd)
+
+
+def mlstm_block(params: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    from repro.models.ssm import _causal_conv
+
+    bsz, s, d = x.shape
+    d_in = 2 * d
+    hd = d_in // cfg.n_heads
+    up = x @ params["up"]
+    xi, z = up[..., :d_in], up[..., d_in:]
+    xc, _ = _causal_conv(xi, params["conv_w"])
+    xc = jax.nn.silu(xc)
+    q = (xc @ params["wq"]).reshape(bsz, s, cfg.n_heads, hd)
+    k = (xc @ params["wk"]).reshape(bsz, s, cfg.n_heads, hd)
+    v = (xi @ params["wv"]).reshape(bsz, s, cfg.n_heads, hd)
+    q = shard(q, "batch", "seq", "state", None)
+    gates = xi @ params["w_if"] + params["if_bias"][None, None]
+    i_gate, f_gate = jnp.split(gates.reshape(bsz, s, 2, cfg.n_heads), 2, axis=2)
+    if cfg.mlstm_impl == "chunked":
+        h, _ = mlstm_chunked(q, k, v, i_gate[:, :, 0], f_gate[:, :, 0], chunk=cfg.mlstm_chunk)
+    else:
+        h = _mlstm_cell(q, k, v, i_gate[:, :, 0], f_gate[:, :, 0])
+    h = h.reshape(bsz, s, d_in).astype(x.dtype)
+    h = rms_norm(h, params["norm_scale"], cfg.norm_eps) * jax.nn.silu(z)
+    return h @ params["down"]
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int) -> dict:
+    d_in = 2 * cfg.d_model
+    hd = d_in // cfg.n_heads
+    return {
+        "c": jnp.zeros((batch, cfg.n_heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, cfg.n_heads, hd), jnp.float32),
+        "m": jnp.full((batch, cfg.n_heads), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d_in), jnp.float32),
+    }
+
+
+def mlstm_decode_step(params: dict, cfg: ArchConfig, x: jax.Array, state: dict):
+    from repro.models.ssm import _causal_conv
+
+    bsz = x.shape[0]
+    d = cfg.d_model
+    d_in = 2 * d
+    hd = d_in // cfg.n_heads
+    up = x @ params["up"]
+    xi, z = up[..., :d_in], up[..., d_in:]
+    xc, conv_state = _causal_conv(xi, params["conv_w"], state["conv"])
+    xc = jax.nn.silu(xc)
+    scale = hd**-0.5
+    q = (xc @ params["wq"]).reshape(bsz, cfg.n_heads, hd).astype(jnp.float32) * scale
+    k = (xc @ params["wk"]).reshape(bsz, cfg.n_heads, hd).astype(jnp.float32) * scale
+    v = (xi @ params["wv"]).reshape(bsz, cfg.n_heads, hd).astype(jnp.float32)
+    gates = (xi @ params["w_if"] + params["if_bias"][None, None]).astype(jnp.float32)
+    gates = gates.reshape(bsz, 2, cfg.n_heads)
+    logi, logf = gates[:, 0], jax.nn.log_sigmoid(gates[:, 1])
+    m_new = jnp.maximum(logf + state["m"], logi)
+    f_s = jnp.exp(logf + state["m"] - m_new)[..., None]
+    i_s = jnp.exp(logi - m_new)[..., None]
+    c = state["c"] * f_s[..., None] + i_s[..., None] * (v[..., :, None] * k[..., None, :])
+    n = state["n"] * f_s + i_s * k
+    denom = jnp.maximum(jnp.abs(jnp.sum(n * q, -1, keepdims=True)), jnp.exp(-m_new)[..., None])
+    h = jnp.einsum("bhvk,bhk->bhv", c, q) / denom
+    h = h.reshape(bsz, 1, d_in).astype(x.dtype)
+    h = rms_norm(h, params["norm_scale"], cfg.norm_eps) * jax.nn.silu(z)
+    return h @ params["down"], {"c": c, "n": n, "m": m_new, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(cfg: ArchConfig, key: jax.Array) -> dict:
+    d = cfg.d_model
+    hd = d // cfg.n_heads
+    ks = jax.random.split(key, 6)
+    d_ff = int(d * 4 / 3)
+    return {
+        "w_in": uniform_init(ks[0], (d, 4 * d), cfg.param_dtype),  # i,f,z,o pre-acts
+        "r": uniform_init(ks[1], (cfg.n_heads, hd, 4 * hd), cfg.param_dtype),
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "norm_scale": jnp.zeros((d,), cfg.param_dtype),
+        "ffn_gate": uniform_init(ks[2], (d, d_ff), cfg.param_dtype),
+        "ffn_up": uniform_init(ks[3], (d, d_ff), cfg.param_dtype),
+        "ffn_down": uniform_init(ks[4], (d_ff, d), cfg.param_dtype),
+    }
+
+
+def _slstm_gates(pre, h_prev, params, n_heads, hd):
+    """pre (B,4d) input pre-activations; recurrent contribution from h_prev."""
+    bsz = pre.shape[0]
+    rec = jnp.einsum(
+        "bhk,hkg->bhg", h_prev.reshape(bsz, n_heads, hd), params["r"].astype(jnp.float32)
+    ).reshape(bsz, 4 * n_heads * hd)
+    return pre + rec
+
+
+def _slstm_cell(params, x_pre, n_heads, hd, segment: int = 0):
+    """x_pre (B,S,4d). Returns h (B,S,d).
+
+    segment > 0 applies segment-level gradient checkpointing: the backward
+    pass saves recurrent state only at segment boundaries and recomputes the
+    (cheap, elementwise) cell within — cutting the per-token HBM state
+    traffic of the inherently-sequential sLSTM by ~segment x
+    (EXPERIMENTS.md section Perf, xlstm iteration 4)."""
+    bsz, s, d4 = x_pre.shape
+    d = d4 // 4
+
+    def step(carry, pre_t):
+        c, n, m, h_prev = carry
+        g = _slstm_gates(pre_t.astype(jnp.float32), h_prev, params, n_heads, hd)
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)  # (B,d) each
+        logf = jax.nn.log_sigmoid(gf)
+        m_new = jnp.maximum(logf + m, gi)
+        i_s = jnp.exp(gi - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c = f_s * c + i_s * jnp.tanh(gz)
+        n = f_s * n + i_s
+        h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+        return (c, n, m_new, h), h
+
+    z = jnp.zeros((bsz, d), jnp.float32)
+    init = (z, z, jnp.full((bsz, d), -1e30, jnp.float32), z)
+    xs = jnp.moveaxis(x_pre, 1, 0)  # (S, B, 4d)
+    if segment and s % segment == 0 and s > segment:
+        n_seg = s // segment
+
+        @jax.checkpoint
+        def seg_body(carry, xs_seg):
+            carry, hs = jax.lax.scan(step, carry, xs_seg)
+            return carry, hs
+
+        _, hs = jax.lax.scan(seg_body, init, xs.reshape(n_seg, segment, bsz, d4))
+        hs = hs.reshape(s, bsz, d)
+    else:
+        _, hs = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(hs, 0, 1)
+
+
+def slstm_block(params: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    bsz, s, d = x.shape
+    hd = d // cfg.n_heads
+    pre = x @ params["w_in"] + params["bias"][None, None]
+    h = _slstm_cell(params, pre, cfg.n_heads, hd, segment=cfg.slstm_segment).astype(x.dtype)
+    h = rms_norm(h, params["norm_scale"], cfg.norm_eps)
+    ff = (h @ params["ffn_up"]) * jax.nn.silu(h @ params["ffn_gate"])
+    return ff @ params["ffn_down"]
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int) -> dict:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, d), -1e30, jnp.float32), "h": z}
+
+
+def slstm_decode_step(params: dict, cfg: ArchConfig, x: jax.Array, state: dict):
+    bsz = x.shape[0]
+    d = cfg.d_model
+    hd = d // cfg.n_heads
+    pre = (x[:, 0] @ params["w_in"] + params["bias"][None]).astype(jnp.float32)
+    g = _slstm_gates(pre, state["h"], params, cfg.n_heads, hd)
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(logf + state["m"], gi)
+    i_s = jnp.exp(gi - m_new)
+    f_s = jnp.exp(logf + state["m"] - m_new)
+    c = f_s * state["c"] + i_s * jnp.tanh(gz)
+    n = f_s * state["n"] + i_s
+    h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+    hx = rms_norm(h[:, None].astype(x.dtype), params["norm_scale"], cfg.norm_eps)
+    ff = (hx @ params["ffn_up"]) * jax.nn.silu(hx @ params["ffn_gate"])
+    return ff @ params["ffn_down"], {"c": c, "n": n, "m": m_new, "h": h}
+
+
+# ---------------------------------------------------------------------------
+# chunkwise-parallel mLSTM (EXPERIMENTS.md section Perf, xlstm iteration)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_chunked(q, k, v, i_gate, f_gate, chunk: int = 128):
+    """Chunkwise-parallel stabilized mLSTM — same math as _mlstm_cell.
+
+    With LF'_t the chunk-local cumulative log-forget and a'_s = li_s - LF'_s,
+    the cell's running stabilizer is m_t = LF'_t + M_t with
+    M_t = max(m_in, cummax(a')_t), and the m-normalized unrolled weights are
+    w[t,s] = exp(a'_s - M_t) — so each chunk is two MXU GEMMs over a (Q, Q)
+    decay matrix plus a rank-1-free state contribution; the (hd x hd) matrix
+    state and normalizer are carried only at CHUNK boundaries.  The
+    sequential cell writes that state to HBM every token — this is the
+    TPU-native schedule (and the target of a future Pallas kernel mirroring
+    kernels/ssd_scan).
+
+    q,k,v (B,S,H,hd) — q,k pre-scaled by hd^-0.5 like _mlstm_cell's inputs;
+    gates (B,S,H) pre-activation.  Returns (h (B,S,H,hd), (C~, n~, m)).
+    """
+    bsz, s, h, hd = q.shape
+    qc = min(chunk, s)
+    while s % qc:
+        qc //= 2
+    nc = s // qc
+
+    scale = hd**-0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(bsz, nc, qc, h, hd)
+    kf = (k.astype(jnp.float32) * scale).reshape(bsz, nc, qc, h, hd)
+    vf = v.astype(jnp.float32).reshape(bsz, nc, qc, h, hd)
+    lf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32)).reshape(bsz, nc, qc, h)
+    li = i_gate.astype(jnp.float32).reshape(bsz, nc, qc, h)
+
+    lf_cum = jnp.cumsum(lf, axis=2)  # LF'_t inclusive (B,nc,Q,H)
+    a = li - lf_cum  # a'_s (B,nc,Q,H)
+    causal = jnp.tril(jnp.ones((qc, qc), bool))
+
+    def body(carry, xs):
+        c_in, n_in, m_in = carry  # (B,H,v,k), (B,H,k), (B,H)
+        q_c, k_c, v_c, lfc_c, a_c = xs  # (B,Q,H,hd) / (B,Q,H)
+        m_big = jnp.maximum(jax.lax.cummax(a_c, axis=1), m_in[:, None, :])  # (B,Q,H)
+        # intra-chunk weights w[t,s] = exp(a'_s - M_t), s <= t
+        d = jnp.exp(a_c[:, None, :, :] - m_big[:, :, None, :])  # (B,t,s,H)
+        d = jnp.where(causal[None, :, :, None], d, 0.0)
+        qk = jnp.einsum("bthd,bshd->btsh", q_c, k_c)
+        num = jnp.einsum("btsh,bshd->bthd", qk * d, v_c)
+        inter = jnp.exp(m_in[:, None, :] - m_big)  # (B,t,H)
+        num = num + inter[..., None] * jnp.einsum("bthk,bhvk->bthv", q_c, c_in)
+        n_vec = jnp.einsum("btsh,bshd->bthd", d, k_c) + inter[..., None] * n_in[:, None]
+        m_t = lfc_c + m_big  # (B,Q,H)
+        denom = jnp.maximum(jnp.abs(jnp.sum(n_vec * q_c, axis=-1)), jnp.exp(-m_t))
+        h_c = num / denom[..., None]
+
+        # chunk-exit state (normalized by exp(m at chunk end))
+        m_end = m_big[:, -1]  # (B,H)
+        w_exit = jnp.exp(a_c - m_end[:, None, :])  # (B,s,H)
+        c_out = jnp.einsum("bsh,bshv,bshk->bhvk", w_exit, v_c, k_c)
+        n_out = jnp.einsum("bsh,bshk->bhk", w_exit, k_c)
+        keep = jnp.exp(m_in - m_end)
+        c_out = c_out + keep[..., None, None] * c_in
+        n_out = n_out + keep[..., None] * n_in
+        m_next = lfc_c[:, -1] + m_end  # cell-equivalent m at chunk end
+        return (c_out, n_out, m_next), h_c
+
+    init = (
+        jnp.zeros((bsz, h, hd, hd), jnp.float32),
+        jnp.zeros((bsz, h, hd), jnp.float32),
+        jnp.full((bsz, h), -1e30, jnp.float32),
+    )
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (qf, kf, vf, lf_cum, a))
+    carry, hs = jax.lax.scan(body, init, xs)
+    out = jnp.moveaxis(hs, 0, 1).reshape(bsz, s, h, hd)
+    return out.astype(q.dtype), carry

@@ -1,0 +1,11 @@
+from repro.optim.fedopt import FedAdam, FedAvgServer, ServerOptimizer
+from repro.optim.sgd import sgd_step, momentum_init, momentum_step
+
+__all__ = [
+    "FedAdam",
+    "FedAvgServer",
+    "ServerOptimizer",
+    "sgd_step",
+    "momentum_init",
+    "momentum_step",
+]

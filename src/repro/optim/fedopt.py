@@ -1,0 +1,69 @@
+"""Server optimizers (Reddi et al. 2020 FedOpt family).
+
+The paper's Algorithm 1 uses x^{t+1} = x^t - eta_g d^t (FedAvgServer with
+eta_g = 1).  FedAdam is provided as a framework feature (disabled in the
+paper-faithful experiment configs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ServerOptimizer", "FedAvgServer", "FedAdam"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerOptimizer:
+    lr: float = 1.0
+
+    def init(self, params) -> Any:
+        return ()
+
+    def apply(self, params, estimate, state):
+        """estimate = d^t (weighted client *updates*, a descent direction)."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAvgServer(ServerOptimizer):
+    def apply(self, params, estimate, state):
+        new = jax.tree_util.tree_map(
+            lambda p, d: p - self.lr * d.astype(p.dtype), params, estimate
+        )
+        return new, state
+
+
+@dataclasses.dataclass(frozen=True)
+class FedAdam(ServerOptimizer):
+    beta1: float = 0.9
+    beta2: float = 0.99
+    eps: float = 1e-3
+
+    def init(self, params):
+        z = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return (z, jax.tree_util.tree_map(jnp.zeros_like, params), jnp.zeros((), jnp.int32))
+
+    def apply(self, params, estimate, state):
+        m, v, t = state
+        t = t + 1
+        m = jax.tree_util.tree_map(
+            lambda m_, d: self.beta1 * m_ + (1 - self.beta1) * d.astype(m_.dtype), m, estimate
+        )
+        v = jax.tree_util.tree_map(
+            lambda v_, d: self.beta2 * v_ + (1 - self.beta2) * jnp.square(d.astype(v_.dtype)),
+            v,
+            estimate,
+        )
+        bc1 = 1 - self.beta1 ** t.astype(jnp.float32)
+        bc2 = 1 - self.beta2 ** t.astype(jnp.float32)
+        new = jax.tree_util.tree_map(
+            lambda p, m_, v_: p
+            - self.lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + self.eps),
+            params,
+            m,
+            v,
+        )
+        return new, (m, v, t)

@@ -1,0 +1,21 @@
+"""Client-side optimizers (the paper uses vanilla SGD with constant step)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sgd_step", "momentum_init", "momentum_step"]
+
+
+def sgd_step(params, grads, lr):
+    return jax.tree_util.tree_map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+
+
+def momentum_init(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def momentum_step(params, mom, grads, lr, beta=0.9):
+    mom = jax.tree_util.tree_map(lambda m, g: beta * m + g.astype(m.dtype), mom, grads)
+    params = jax.tree_util.tree_map(lambda p, m: p - lr * m, params, mom)
+    return params, mom

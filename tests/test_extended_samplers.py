@@ -1,0 +1,96 @@
+"""OSMD (Appendix E.3) and clustered K-Vib (Section 7 extension) samplers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import estimator, samplers
+
+
+def test_osmd_roundtrip_and_unbiased():
+    n, k, d = 20, 6, 8
+    s = samplers.make_sampler("osmd", n=n, budget=k)
+    st = s.init()
+    g = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    lam = jnp.ones(n) / n
+    fb = lam * jnp.linalg.norm(g, axis=1)
+    for t in range(8):
+        draw = s.sample(st, jax.random.PRNGKey(t))
+        st = s.update(st, draw, fb * draw.mask)
+    p = s.probabilities(st)
+    assert abs(float(p.sum()) - 1.0) < 1e-5  # RSP simplex
+    assert float(p.min()) >= 0.2 / n - 1e-7  # floor
+
+    # unbiasedness
+    target = np.asarray(estimator.full_aggregate_stacked(g, lam))
+    trials = 4000
+    keys = jax.random.split(jax.random.PRNGKey(9), trials)
+
+    def one(key):
+        draw = s.sample(st, key)
+        w = estimator.client_weights(draw, lam, s.procedure, k)
+        return estimator.aggregate_stacked(g, w)
+
+    ests = jax.vmap(one)(keys)
+    mean = np.asarray(jnp.mean(ests, 0))
+    se = np.asarray(jnp.std(ests, 0)) / np.sqrt(trials)
+    assert np.all(np.abs(mean - target) < 5 * se + 1e-4)
+
+
+def test_osmd_adapts_toward_high_feedback():
+    n, k = 24, 6
+    s = samplers.make_sampler("osmd", n=n, budget=k, lr=0.8)
+    st = s.init()
+    fb = jnp.linspace(0.05, 1.0, n)
+    for t in range(60):
+        draw = s.sample(st, jax.random.PRNGKey(t))
+        st = s.update(st, draw, fb * draw.mask)
+    p = np.asarray(s.probabilities(st))
+    assert p[-6:].mean() > 1.3 * p[:6].mean()
+
+
+def test_clustered_kvib_pools_feedback():
+    """Unsampled clients inherit their cluster's statistics: after feedback
+    only from EVEN clients, odd clients in the same cluster must have higher
+    probability than clients in a never-sampled cluster."""
+    n, k = 16, 4
+    # clusters: 0..7 -> cluster 0 (high feedback), 8..15 -> cluster 1 (never sampled)
+    cids = tuple([0] * 8 + [1] * 8)
+    s = samplers.make_sampler(
+        "clustered_kvib", n=n, budget=k, cluster_ids=cids, horizon=100, gamma=1e-4
+    )
+    st = s.init()
+    # hand-crafted draws: only clients 0, 2, 4, 6 ever report feedback
+    fb = jnp.zeros(n).at[jnp.array([0, 2, 4, 6])].set(1.0)
+    for t in range(25):
+        draw = s.sample(st, jax.random.PRNGKey(t))
+        st = s.update(st, draw, fb * draw.mask)
+    p = np.asarray(s.probabilities(st))
+    # odd clients of cluster 0 (no own feedback) should beat cluster-1 clients
+    assert p[jnp.array([1, 3, 5, 7])].mean() > 1.2 * p[8:].mean()
+    assert abs(p.sum() - k) < 1e-3 * k  # ISP budget invariant
+
+
+def test_clustered_kvib_unbiased():
+    n, k, d = 12, 4, 6
+    cids = tuple(i % 3 for i in range(n))
+    s = samplers.make_sampler("clustered_kvib", n=n, budget=k, cluster_ids=cids, gamma=0.1)
+    st = s.init()
+    g = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    lam = jax.random.dirichlet(jax.random.PRNGKey(2), jnp.ones(n))
+    fb = lam * jnp.linalg.norm(g, axis=1)
+    for t in range(4):
+        draw = s.sample(st, jax.random.PRNGKey(t))
+        st = s.update(st, draw, fb * draw.mask)
+    target = np.asarray(estimator.full_aggregate_stacked(g, lam))
+    trials = 4000
+    keys = jax.random.split(jax.random.PRNGKey(7), trials)
+
+    def one(key):
+        draw = s.sample(st, key)
+        w = estimator.client_weights(draw, lam, s.procedure, k)
+        return estimator.aggregate_stacked(g, w)
+
+    ests = jax.vmap(one)(keys)
+    mean = np.asarray(jnp.mean(ests, 0))
+    se = np.asarray(jnp.std(ests, 0)) / np.sqrt(trials)
+    assert np.all(np.abs(mean - target) < 5 * se + 1e-4)

@@ -1,0 +1,123 @@
+"""Perf-variant implementations must match their reference paths exactly
+(EXPERIMENTS.md section Perf: every optimization keeps the math)."""
+import dataclasses
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer, xlstm
+
+
+def test_mlstm_chunked_matches_cell():
+    B, S, H, hd = 2, 256, 3, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q, k, v = (jax.random.normal(ks[i], (B, S, H, hd)) for i in range(3))
+    ig = jax.random.normal(ks[3], (B, S, H)) * 2.0
+    fg = jax.random.normal(ks[4], (B, S, H)) * 2.0 + 2.0
+    h_ref = xlstm._mlstm_cell(q, k, v, ig, fg)
+    for chunk in (32, 128):
+        h_chk, _ = xlstm.mlstm_chunked(q, k, v, ig, fg, chunk=chunk)
+        np.testing.assert_allclose(
+            np.asarray(h_chk, np.float32), np.asarray(h_ref, np.float32),
+            atol=2e-3, rtol=2e-3,
+        )
+
+
+def test_mlstm_chunked_final_state_matches_decode_chain():
+    """Chunked-prefill state must continue identically under decode steps."""
+    B, S, H, hd = 1, 64, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    q, k, v = (jax.random.normal(ks[i], (B, S, H, hd)) for i in range(3))
+    ig = jax.random.normal(ks[3], (B, S, H))
+    fg = jax.random.normal(ks[4], (B, S, H)) + 2.0
+    _, (c_chk, n_chk, m_chk) = xlstm.mlstm_chunked(q, k, v, ig, fg, chunk=16)
+
+    # sequential replay for the reference state
+    scale = hd**-0.5
+    c = jnp.zeros((B, H, hd, hd)); n = jnp.zeros((B, H, hd)); m = jnp.full((B, H), -jnp.inf)
+    lf_all = jax.nn.log_sigmoid(fg)
+    for t in range(S):
+        m_new = jnp.maximum(lf_all[:, t] + m, ig[:, t])
+        f_s = jnp.exp(lf_all[:, t] + m - m_new)[..., None]
+        i_s = jnp.exp(ig[:, t] - m_new)[..., None]
+        kt = k[:, t] * scale
+        c = c * f_s[..., None] + i_s[..., None] * (v[:, t][..., :, None] * kt[..., None, :])
+        n = n * f_s + i_s * kt
+        m = m_new
+    np.testing.assert_allclose(np.asarray(c_chk), np.asarray(c), atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(n_chk), np.asarray(n), atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(m_chk), np.asarray(m), atol=1e-4, rtol=1e-4)
+
+
+def test_chunked_attention_matches_einsum():
+    cfg = get_config("smollm-360m").reduced(n_layers=2)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 1024), 0, cfg.vocab)
+    l1, _ = transformer.forward(params, cfg, tok)
+    cfg2 = dataclasses.replace(cfg, attn_impl="chunked")
+    l2, _ = transformer.forward(params, cfg2, tok)
+    np.testing.assert_allclose(
+        np.asarray(l1, np.float32), np.asarray(l2, np.float32), atol=1e-4, rtol=1e-3
+    )
+
+
+_A2A_PROBE = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import dataclasses, json
+    import jax, jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import transformer, moe as moe_mod
+    from repro.models import sharding as msharding
+
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    cfg = get_config("qwen3-moe-235b-a22b").reduced(
+        n_layers=1, d_model=64, n_experts=4, top_k=2, moe_d_ff=64,
+        vocab=128, capacity_factor=8.0)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    moe_params = jax.tree_util.tree_map(lambda x: x[0], params["stacks"][0])["moe"]
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 64), jnp.float32)
+    y_dense, _ = moe_mod.moe_ffn(moe_params, cfg, x)
+    cfg_a = dataclasses.replace(cfg, moe_impl="a2a")
+    with msharding.use_rules(mesh, dict(msharding.DEFAULT_RULES)):
+        y_a2a, _ = jax.jit(lambda p, x: moe_mod.moe_ffn(p, cfg_a, x))(moe_params, x)
+    err = float(jnp.max(jnp.abs(y_dense - y_a2a)))
+    print("RESULT", json.dumps({"err": err}))
+    """
+)
+
+
+def test_moe_a2a_matches_dense_subprocess():
+    import json
+
+    proc = subprocess.run(
+        [sys.executable, "-c", _A2A_PROBE],
+        capture_output=True, text=True, timeout=600,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT"):
+            err = json.loads(line.split(" ", 1)[1])["err"]
+            assert err < 1e-3, err
+            return
+    raise AssertionError(proc.stdout)
+
+
+def test_xlstm_forward_chunked_config():
+    cfg = get_config("xlstm-125m").reduced()
+    cfg2 = dataclasses.replace(cfg, mlstm_impl="chunked")
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, cfg.vocab)
+    l1, _ = transformer.forward(params, cfg, tok)
+    l2, _ = transformer.forward(params, cfg2, tok)
+    np.testing.assert_allclose(
+        np.asarray(l1, np.float32), np.asarray(l2, np.float32), atol=5e-3, rtol=5e-3
+    )

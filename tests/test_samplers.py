@@ -1,0 +1,174 @@
+"""Sampler behaviour: unbiasedness, variance ordering, constraint invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import estimator, samplers, solver
+
+ALL_SAMPLERS = ["uniform_isp", "uniform_rsp", "kvib", "vrb", "mabs", "avare", "optimal_isp"]
+
+
+@pytest.mark.parametrize("name", ALL_SAMPLERS)
+def test_roundtrip_and_constraints(name):
+    n, k = 40, 8
+    s = samplers.make_sampler(name, n=n, budget=k)
+    st_ = s.init()
+    key = jax.random.PRNGKey(0)
+    fb_full = jax.random.uniform(jax.random.PRNGKey(1), (n,), minval=0.1, maxval=1.0)
+    for t in range(6):
+        key, sub = jax.random.split(key)
+        draw = s.sample(st_, sub)
+        assert draw.mask.shape == (n,)
+        assert draw.counts.dtype == jnp.int32
+        st_ = s.update(st_, draw, fb_full * draw.mask)
+    p = s.probabilities(st_)
+    assert p.shape == (n,)
+    assert float(p.min()) > 0.0
+    if s.procedure == "isp":
+        assert abs(float(p.sum()) - k) < 1e-3 * k, f"{name}: ISP marginals must sum to K"
+        assert float(p.max()) <= 1.0 + 1e-6
+    else:
+        # RSP draw distributions are normalized.
+        dp = s.probabilities(st_)
+        if name != "uniform_rsp":
+            assert abs(float(dp.sum()) - 1.0) < 1e-5
+
+
+@pytest.mark.parametrize("name", ["uniform_isp", "kvib", "vrb", "mabs", "avare", "uniform_rsp"])
+def test_estimator_unbiased_statistically(name):
+    """Definition 2.1: E[d^t] == sum_i lambda_i g_i for every sampler."""
+    n, k, d = 24, 6, 16
+    g = jax.random.normal(jax.random.PRNGKey(2), (n, d))
+    lam = jax.random.dirichlet(jax.random.PRNGKey(3), jnp.ones(n))
+    target = np.asarray(estimator.full_aggregate_stacked(g, lam))
+
+    s = samplers.make_sampler(name, n=n, budget=k)
+    st_ = s.init()
+    # burn-in so adaptive states are non-trivial
+    fb = lam * jnp.linalg.norm(g, axis=1)
+    for t in range(3):
+        draw = s.sample(st_, jax.random.PRNGKey(50 + t))
+        st_ = s.update(st_, draw, fb * draw.mask)
+
+    trials = 4000
+    keys = jax.random.split(jax.random.PRNGKey(7), trials)
+
+    def one(key):
+        draw = s.sample(st_, key)
+        w = estimator.client_weights(draw, lam, s.procedure, s.budget)
+        return estimator.aggregate_stacked(g, w)
+
+    ests = jax.vmap(one)(keys)
+    mean = np.asarray(jnp.mean(ests, axis=0))
+    se = np.asarray(jnp.std(ests, axis=0)) / np.sqrt(trials)
+    # 5-sigma elementwise test
+    assert np.all(np.abs(mean - target) < 5.0 * se + 1e-4), name
+
+
+def test_isp_variance_below_rsp_empirically():
+    """Lemma 2.1 / Figure 1: for identical adaptive marginals, the ISP
+    estimator's empirical variance is below the RSP(with-replacement) one."""
+    n, k, d = 30, 8, 64
+    g = jax.random.normal(jax.random.PRNGKey(0), (n, d)) * jnp.linspace(
+        0.2, 3.0, n
+    ).reshape(n, 1)
+    lam = jnp.ones((n,)) / n
+    scores = lam * jnp.linalg.norm(g, axis=1)
+    p_isp = solver.isp_probabilities(scores, float(k))
+    target = estimator.full_aggregate_stacked(g, lam)
+
+    trials = 3000
+
+    def isp_err(key):
+        draw = samplers._isp_draw(key, p_isp)
+        w = estimator.client_weights(draw, lam, "isp", k)
+        est = estimator.aggregate_stacked(g, w)
+        return estimator.empirical_sq_error(est, target)
+
+    q = scores / scores.sum()
+
+    def rsp_err(key):
+        draw = samplers._rsp_wr_draw(key, q, k)
+        w = estimator.client_weights(draw, lam, "rsp_wr", k)
+        est = estimator.aggregate_stacked(g, w)
+        return estimator.empirical_sq_error(est, target)
+
+    keys = jax.random.split(jax.random.PRNGKey(5), trials)
+    v_isp = float(jnp.mean(jax.vmap(isp_err)(keys)))
+    v_rsp = float(jnp.mean(jax.vmap(rsp_err)(keys)))
+    assert v_isp < v_rsp, (v_isp, v_rsp)
+    # And the analytic ISP variance formula matches the empirical one.
+    v_analytic = float(estimator.isp_variance(scores, p_isp))
+    assert abs(v_isp - v_analytic) / v_analytic < 0.15
+
+
+def test_isp_expected_cohort_size():
+    """Section 3: |S^t| is random with E|S| = K under ISP."""
+    n, k = 100, 20
+    s = samplers.make_sampler("uniform_isp", n=n, budget=k)
+    st_ = s.init()
+    sizes = []
+    for t in range(500):
+        draw = s.sample(st_, jax.random.PRNGKey(t))
+        sizes.append(int(draw.size))
+    sizes = np.asarray(sizes)
+    assert abs(sizes.mean() - k) < 0.5
+    assert sizes.std() > 0.5  # genuinely stochastic
+
+
+def test_kvib_probabilities_track_feedback():
+    """Clients with persistently larger feedback get larger p under K-Vib."""
+    n, k = 32, 8
+    s = samplers.make_sampler("kvib", n=n, budget=k, horizon=200, gamma=1e-4)
+    st_ = s.init()
+    fb_full = jnp.linspace(0.05, 1.0, n)  # client i feedback ~ i
+    key = jax.random.PRNGKey(0)
+    for t in range(100):
+        key, sub = jax.random.split(key)
+        draw = s.sample(st_, sub)
+        st_ = s.update(st_, draw, fb_full * draw.mask)
+    p = np.asarray(s.probabilities(st_))
+    # Spearman-ish: top-quartile clients should have higher mean p than bottom.
+    assert p[-8:].mean() > 1.5 * p[:8].mean()
+
+
+def test_kvib_regret_decreases_with_budget():
+    """Theorem 5.2 (Figure 3b): per-round regret shrinks as K grows."""
+    n, T = 64, 120
+    rng = np.random.default_rng(0)
+    base = rng.uniform(0.1, 1.0, size=n).astype(np.float32)
+
+    def run(k):
+        s = samplers.make_sampler("kvib", n=n, budget=k, horizon=T, gamma=None)
+        st_ = s.init()
+        key = jax.random.PRNGKey(1)
+        reg = 0.0
+        for t in range(T):
+            fb_full = jnp.asarray(base * (1.0 + 0.05 * rng.standard_normal(n).astype(np.float32)))
+            key, sub = jax.random.split(key)
+            p = s.probabilities(st_)
+            draw = s.sample(st_, sub)
+            cost = float(solver.expected_cost(fb_full, p))
+            opt = float(solver.optimal_cost(fb_full, float(k)))
+            reg += cost - opt
+            st_ = s.update(st_, draw, fb_full * draw.mask)
+        return reg / T
+
+    r8, r32 = run(8), run(32)
+    assert r32 < r8, (r8, r32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_client_weights_nonnegative_and_sparse(seed):
+    n, k = 50, 10
+    s = samplers.make_sampler("kvib", n=n, budget=k, gamma=0.1)
+    st_ = s.init()
+    draw = s.sample(st_, jax.random.PRNGKey(seed))
+    lam = jnp.ones(n) / n
+    w = estimator.client_weights(draw, lam, "isp", k)
+    w = np.asarray(w)
+    assert (w >= 0).all()
+    assert (w[~np.asarray(draw.mask)] == 0).all()

@@ -1,0 +1,119 @@
+"""Unit + property tests for the water-filling solvers (Lemmas 2.2/5.1/B.8)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import solver
+
+
+def test_paper_example_3_2():
+    """Paper Section 3, Example 3.2: a = ||g_i|| = [1,3,6], K=2 -> [.25,.75,1]."""
+    p = solver.isp_probabilities(jnp.array([1.0, 3.0, 6.0]), 2.0)
+    np.testing.assert_allclose(np.asarray(p), [0.25, 0.75, 1.0], atol=1e-6)
+
+
+def test_k1_reduces_to_rsp():
+    """Section 3: with K=1 the ISP solution equals the RSP solution."""
+    a = jnp.array([1.0, 3.0, 6.0])
+    np.testing.assert_allclose(
+        np.asarray(solver.isp_probabilities(a, 1.0)),
+        np.asarray(solver.rsp_probabilities(a, 1.0)),
+        atol=1e-6,
+    )
+
+
+def test_full_budget_saturates():
+    p = solver.isp_probabilities(jnp.array([0.5, 1.0, 2.0, 9.0]), 4.0)
+    np.testing.assert_allclose(np.asarray(p), np.ones(4), atol=1e-6)
+
+
+def test_uniform_scores_give_uniform_probs():
+    p = solver.isp_probabilities(jnp.ones(10), 3.0)
+    np.testing.assert_allclose(np.asarray(p), np.full(10, 0.3), atol=1e-6)
+
+
+def test_floor_is_respected():
+    a = jnp.array([1e-4, 1.0, 2.0, 3.0])
+    p = solver.isp_probabilities(a, 2.0, p_min=0.1)
+    assert float(p.min()) >= 0.1 - 1e-7
+    assert abs(float(p.sum()) - 2.0) < 1e-5
+
+
+def test_mixing_strategy():
+    """eq. 12: floor theta*K/N, budget preserved."""
+    p = jnp.array([0.0, 0.5, 1.0, 0.5])  # sums to 2
+    mixed = solver.mix_probabilities(p, 0.4, 2.0)
+    assert abs(float(mixed.sum()) - 2.0) < 1e-6
+    assert float(mixed.min()) >= 0.4 * 2.0 / 4 - 1e-7
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(2, 300),
+    frac=st.floats(0.01, 1.0),
+    scale=st.floats(0.01, 100.0),
+)
+def test_isp_constraints_property(seed, n, frac, scale):
+    """sum(p) == K, p in (0, 1], for arbitrary positive scores."""
+    k = max(1.0, frac * n)
+    a = (
+        jax.random.uniform(jax.random.PRNGKey(seed), (n,), minval=1e-6, maxval=1.0)
+        ** 2
+        * scale
+    )
+    p = solver.isp_probabilities(a, k)
+    assert abs(float(jnp.sum(p)) - k) < max(1e-3, 1e-4 * k)
+    assert float(jnp.max(p)) <= 1.0 + 1e-6
+    assert float(jnp.min(p)) > 0.0
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(3, 100), k=st.integers(1, 50))
+def test_isp_kkt_property(seed, n, k):
+    """KKT: on the interior, a_i/p_i is constant; capped clients have larger
+    a_i than the implied water level."""
+    k = min(k, n - 1)
+    a = jax.random.uniform(jax.random.PRNGKey(seed), (n,), minval=0.01, maxval=1.0)
+    p = np.asarray(solver.isp_probabilities(a, float(k)))
+    a = np.asarray(a)
+    interior = (p < 1.0 - 1e-6) & (p > 1e-9)
+    if interior.sum() >= 2:
+        levels = a[interior] / p[interior]
+        assert np.allclose(levels, levels.mean(), rtol=1e-3)
+        if (~interior).any():
+            assert a[~interior].min() >= levels.mean() * (1 - 1e-3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(3, 60))
+def test_isp_beats_rsp_cost_property(seed, n):
+    """The ISP solution's cost is never above the RSP solution's cost
+    (Lemma 2.1: ISP variance minimizes the bound; both evaluated in the
+    shared objective sum a^2/p)."""
+    a = jax.random.uniform(jax.random.PRNGKey(seed), (n,), minval=0.01, maxval=1.0)
+    k = max(2.0, 0.3 * n)
+    c_isp = float(solver.expected_cost(a, solver.isp_probabilities(a, k)))
+    c_rsp = float(solver.expected_cost(a, solver.rsp_probabilities(a, k)))
+    assert c_isp <= c_rsp * (1 + 1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_optimal_cost_closed_form(seed):
+    """eq. 39: when nothing saturates, min cost = (sum a)^2 / K."""
+    a = jax.random.uniform(jax.random.PRNGKey(seed), (64,), minval=0.5, maxval=1.0)
+    k = 4.0  # K * max(a) <= sum(a) guaranteed: 4*1 <= 32
+    got = float(solver.optimal_cost(a, k))
+    want = float(jnp.sum(a)) ** 2 / k
+    assert abs(got - want) < 1e-2 * want
+
+
+def test_budget_monotone_cost():
+    """More budget -> lower optimal cost (Section 3, asymptotic property)."""
+    a = jax.random.uniform(jax.random.PRNGKey(0), (128,), minval=0.01, maxval=1.0)
+    costs = [float(solver.optimal_cost(a, float(k))) for k in (2, 8, 32, 64, 128)]
+    assert all(c1 >= c2 - 1e-5 for c1, c2 in zip(costs, costs[1:]))
+    assert costs[-1] <= float(jnp.sum(a**2)) * (1 + 1e-5)  # K=N: p=1, cost=sum a^2

@@ -1,0 +1,49 @@
+"""Appendix E.1: availability-corrected estimation stays unbiased."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import estimator, samplers
+from repro.core.stragglers import availability_weights, available_draw
+
+
+def test_unbiased_under_stragglers():
+    n, k, d = 24, 8, 12
+    g = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    lam = jax.random.dirichlet(jax.random.PRNGKey(1), jnp.ones(n))
+    q = jax.random.uniform(jax.random.PRNGKey(2), (n,), minval=0.4, maxval=1.0)
+    target = np.asarray(estimator.full_aggregate_stacked(g, lam))
+
+    s = samplers.make_sampler("kvib", n=n, budget=k, gamma=0.05)
+    st = s.init()
+    # burn-in
+    fb = lam * jnp.linalg.norm(g, axis=1)
+    for t in range(3):
+        dr = s.sample(st, jax.random.PRNGKey(10 + t))
+        st = s.update(st, dr, fb * dr.mask)
+
+    trials = 6000
+    keys = jax.random.split(jax.random.PRNGKey(5), trials)
+
+    def one(key):
+        k1, k2 = jax.random.split(key)
+        dr = s.sample(st, k1)
+        avail = jax.random.uniform(k2, (n,)) < q
+        dr = available_draw(dr, avail)
+        w = availability_weights(dr, lam, q, s.procedure, s.budget)
+        return estimator.aggregate_stacked(g, w)
+
+    ests = jax.vmap(one)(keys)
+    mean = np.asarray(jnp.mean(ests, axis=0))
+    se = np.asarray(jnp.std(ests, axis=0)) / np.sqrt(trials)
+    assert np.all(np.abs(mean - target) < 5.0 * se + 1e-4)
+
+
+def test_unavailable_clients_never_included():
+    n, k = 16, 6
+    s = samplers.make_sampler("uniform_isp", n=n, budget=k)
+    st = s.init()
+    avail = jnp.arange(n) % 2 == 0  # odd clients offline
+    for t in range(30):
+        dr = available_draw(s.sample(st, jax.random.PRNGKey(t)), avail)
+        assert not bool(jnp.any(jnp.logical_and(dr.mask, ~avail)))
