@@ -22,6 +22,11 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=200)
     ap.add_argument("--budgets", type=int, nargs="+", default=[5, 10, 20, 40])
     ap.add_argument("--samplers", nargs="+", default=["kvib", "vrb", "mabs", "avare"])
+    ap.add_argument(
+        "--python-loop",
+        action="store_true",
+        help="per-round Python dispatch instead of the compiled lax.scan loop",
+    )
     ap.add_argument("--out", default="results/budget.json")
     args = ap.parse_args()
 
@@ -35,6 +40,7 @@ def main() -> None:
             cfg = FedConfig(
                 rounds=args.rounds, budget=k, local_steps=1,
                 batch_size=64, local_lr=0.02, seed=0,
+                compiled=not args.python_loop,
             )
             kw = {"horizon": args.rounds} if name in ("kvib", "vrb") else {}
             sampler = make_sampler(name, n=ds.n_clients, budget=k, **kw)

@@ -22,6 +22,11 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=100)
     ap.add_argument("--budget", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--python-loop",
+        action="store_true",
+        help="per-round Python dispatch instead of the compiled lax.scan loop",
+    )
     args = ap.parse_args()
 
     ds = synthetic_classification(
@@ -35,6 +40,7 @@ def main() -> None:
         batch_size=64,
         local_lr=0.02,
         seed=args.seed,
+        compiled=not args.python_loop,
     )
     ev = ds.batch_all_clients(jax.random.PRNGKey(999), 8)
     ev = (ev[0].reshape(-1, ev[0].shape[-1]), ev[1].reshape(-1))

@@ -39,8 +39,14 @@ def main() -> None:
     ap.add_argument("--budget", type=int, default=10)
     ap.add_argument("--seeds", type=int, default=3)
     ap.add_argument("--gamma-sweep", action="store_true")
+    ap.add_argument(
+        "--python-loop",
+        action="store_true",
+        help="per-round Python dispatch instead of the compiled lax.scan loop",
+    )
     ap.add_argument("--out", default="results/synthetic.json")
     args = ap.parse_args()
+    compiled = not args.python_loop
 
     results = {"config": vars(args), "runs": {}}
     for seed in range(args.seeds):
@@ -51,7 +57,7 @@ def main() -> None:
         ev = (ev[0].reshape(-1, ev[0].shape[-1]), ev[1].reshape(-1))
         cfg = FedConfig(
             rounds=args.rounds, budget=args.budget, local_steps=1,
-            batch_size=64, local_lr=0.02, seed=seed,
+            batch_size=64, local_lr=0.02, seed=seed, compiled=compiled,
         )
         for name in SAMPLERS:
             kw = {"horizon": args.rounds} if name in ("kvib", "vrb") else {}
@@ -69,7 +75,7 @@ def main() -> None:
         )
         cfg = FedConfig(
             rounds=args.rounds, budget=args.budget, local_steps=1,
-            batch_size=64, local_lr=0.02, seed=0,
+            batch_size=64, local_lr=0.02, seed=0, compiled=compiled,
         )
         for gamma in (1e-4, 1e-3, 1e-2, 1e-1, 1.0):
             r = run_one("kvib", ds, cfg, None, horizon=args.rounds, gamma=gamma)

@@ -15,6 +15,8 @@ operates on *pytrees* of client updates.  Two layouts are supported:
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -24,6 +26,7 @@ __all__ = [
     "client_weights",
     "aggregate_stacked",
     "full_aggregate_stacked",
+    "aggregate_and_error",
     "isp_variance",
     "rsp_variance_bound",
     "empirical_sq_error",
@@ -73,6 +76,56 @@ def full_aggregate_stacked(updates, lam: jax.Array):
         return jnp.sum(w * leaf, axis=0)
 
     return jax.tree_util.tree_map(agg, updates)
+
+
+def _flatten_stacked(updates):
+    """Stacked pytree (leading client axis N) -> (N, D) f32 + rebuild spec."""
+    leaves, treedef = jax.tree_util.tree_flatten(updates)
+    meta = tuple((leaf.shape[1:], leaf.dtype) for leaf in leaves)
+    flat = jnp.concatenate(
+        [leaf.reshape((leaf.shape[0], -1)).astype(jnp.float32) for leaf in leaves],
+        axis=1,
+    )
+    return flat, (treedef, meta)
+
+
+def _unflatten_vector(vec: jax.Array, spec):
+    treedef, meta = spec
+    out, off = [], 0
+    for shape, dtype in meta:
+        size = math.prod(shape) if shape else 1
+        out.append(vec[off : off + size].reshape(shape).astype(dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def aggregate_and_error(updates, weights: jax.Array, lam: jax.Array):
+    """Estimate ``d = sum_i w_i g_i`` AND its squared error against the
+    full-participation target ``sum_i lambda_i g_i`` in ONE pass over the
+    stacked updates.
+
+    The error vector ``sum_i (w_i - lam_i) g_i`` shares the pass: stacking the
+    two weight rows turns both reductions into a single (2, N) x (N, D)
+    contraction over the flattened deltas — the largest tensor the server
+    touches — routed through ``kernels.fused_weighted_agg`` on TPU.
+
+    Returns (estimate pytree, scalar squared error).
+    """
+    flat, spec = _flatten_stacked(updates)
+    w2 = jnp.stack(
+        [weights.astype(jnp.float32), weights.astype(jnp.float32) - lam.astype(jnp.float32)]
+    )
+    d_dim = flat.shape[1]
+    if jax.default_backend() == "tpu" and d_dim % 128 == 0:
+        from repro.kernels.fused_weighted_agg import fused_multi_weighted_agg
+
+        bd = d_dim if d_dim <= 2048 else max(
+            b for b in (2048, 1024, 512, 256, 128) if d_dim % b == 0
+        )
+        out = fused_multi_weighted_agg(flat, w2, block_d=bd)
+    else:
+        out = w2 @ flat
+    return _unflatten_vector(out[0], spec), jnp.sum(out[1] ** 2)
 
 
 def isp_variance(scores: jax.Array, p: jax.Array) -> jax.Array:

@@ -16,7 +16,21 @@ import numpy as np
 
 from repro.core import solver
 
-__all__ = ["RegretTracker"]
+__all__ = ["RegretTracker", "round_costs"]
+
+
+def round_costs(
+    full_scores: jax.Array, p_used: jax.Array, budget: float | jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Device-side per-round online costs: (l_t(p^t), min_p l_t(p)).
+
+    Jittable/scan-safe counterpart of ``RegretTracker.record`` — the compiled
+    server loop emits these as stacked per-round buffers and materializes a
+    ``RegretTracker`` view once at the end via ``RegretTracker.from_arrays``.
+    """
+    cost = solver.expected_cost(full_scores, p_used)
+    opt = solver.optimal_cost(full_scores, budget)
+    return cost, opt
 
 
 @dataclasses.dataclass
@@ -38,6 +52,26 @@ class RegretTracker:
         self.costs.append(cost)
         self.opt_costs.append(opt)
         self.score_history.append(full_scores)
+
+    @classmethod
+    def from_arrays(
+        cls,
+        budget: int,
+        costs,
+        opt_costs,
+        score_history,
+    ) -> "RegretTracker":
+        """Post-hoc view over stacked on-device buffers (T,), (T,), (T, N)
+        produced inside the compiled scan loop."""
+        costs = np.asarray(costs)
+        opt_costs = np.asarray(opt_costs)
+        score_history = np.asarray(score_history)
+        return cls(
+            budget=budget,
+            costs=[float(c) for c in costs],
+            opt_costs=[float(c) for c in opt_costs],
+            score_history=[score_history[t] for t in range(score_history.shape[0])],
+        )
 
     # -- metrics ---------------------------------------------------------
 

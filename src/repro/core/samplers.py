@@ -140,13 +140,23 @@ class Sampler:
         """Marginal inclusion probabilities (sum == budget for ISP)."""
         return jnp.full((self.n,), self.budget / self.n)
 
-    def sample(self, state: SamplerState, key: jax.Array) -> SampleResult:
+    def sample_from(self, probs: jax.Array, key: jax.Array) -> SampleResult:
+        """Draw a cohort from an already-solved probability vector.
+
+        Splitting the solve (``probabilities``) from the draw lets callers —
+        in particular the compiled server loop — compute p~ exactly once per
+        round and reuse it for both the draw and the regret diagnostics.
+        """
         if self.procedure == "isp":
-            return _isp_draw(key, self.probabilities(state))
+            return _isp_draw(key, probs)
         if self.procedure == "rsp_wr":
-            p = self.probabilities(state)
-            return _rsp_wr_draw(key, p / jnp.maximum(jnp.sum(p), 1e-30), self.budget)
+            return _rsp_wr_draw(
+                key, probs / jnp.maximum(jnp.sum(probs), 1e-30), self.budget
+            )
         return _rsp_wor_uniform_draw(key, self.n, self.budget)
+
+    def sample(self, state: SamplerState, key: jax.Array) -> SampleResult:
+        return self.sample_from(self.probabilities(state), key)
 
     def update(
         self, state: SamplerState, draw: SampleResult, feedback: jax.Array
@@ -252,9 +262,6 @@ class Vrb(Sampler):
         theta = self._theta()
         return (1.0 - theta) * p + theta / self.n
 
-    def sample(self, state: SamplerState, key: jax.Array) -> SampleResult:
-        return _rsp_wr_draw(key, self.probabilities(state), self.budget)
-
     def update(
         self, state: SamplerState, draw: SampleResult, feedback: jax.Array
     ) -> SamplerState:
@@ -290,9 +297,6 @@ class Mabs(Sampler):
         w = jnp.exp(logw)
         p = w / jnp.maximum(jnp.sum(w), 1e-30)
         return (1.0 - self.theta) * p + self.theta / self.n
-
-    def sample(self, state: SamplerState, key: jax.Array) -> SampleResult:
-        return _rsp_wr_draw(key, self.probabilities(state), self.budget)
 
     def update(
         self, state: SamplerState, draw: SampleResult, feedback: jax.Array
@@ -336,9 +340,6 @@ class Avare(Sampler):
         p = jnp.maximum(p, p_min)
         return p / jnp.sum(p)
 
-    def sample(self, state: SamplerState, key: jax.Array) -> SampleResult:
-        return _rsp_wr_draw(key, self.probabilities(state), self.budget)
-
     def update(
         self, state: SamplerState, draw: SampleResult, feedback: jax.Array
     ) -> SamplerState:
@@ -367,25 +368,6 @@ class OptimalISP(Sampler):
         return jnp.where(has_fb, p_opt, jnp.full((self.n,), self.budget / self.n))
 
 
-_REGISTRY = {
-    "uniform_isp": UniformISP,
-    "uniform_rsp": UniformRSP,
-    "kvib": KVib,
-    "vrb": Vrb,
-    "mabs": Mabs,
-    "avare": Avare,
-    "optimal_isp": OptimalISP,
-}
-
-
-def make_sampler(name: str, n: int, budget: int, **kw) -> Sampler:
-    try:
-        cls = _REGISTRY[name]
-    except KeyError as e:
-        raise ValueError(f"unknown sampler {name!r}; options: {sorted(_REGISTRY)}") from e
-    return cls(n=n, budget=budget, **kw)
-
-
 @dataclasses.dataclass(frozen=True)
 class Osmd(Sampler):
     """OSMD-style sampler (Zhao et al. 2021, paper Appendix E.3).
@@ -411,9 +393,6 @@ class Osmd(Sampler):
 
     def probabilities(self, state: SamplerState) -> jax.Array:
         return state.stats
-
-    def sample(self, state: SamplerState, key: jax.Array) -> SampleResult:
-        return _rsp_wr_draw(key, state.stats, self.budget)
 
     def update(
         self, state: SamplerState, draw: SampleResult, feedback: jax.Array
@@ -445,7 +424,7 @@ class ClusteredKVib(Sampler):
     The sampling itself stays independent per client (ISP, unbiased as ever).
     """
 
-    cluster_ids: tuple = ()  # len n, values in [0, m)
+    cluster_ids: tuple = ()  # len n, values in [0, m); empty = every client alone
     horizon: int = 500
     theta: float | None = None
     gamma: float | None = None
@@ -461,6 +440,10 @@ class ClusteredKVib(Sampler):
         return dataclasses.replace(st, aux=jnp.full((self.n,), gamma0, jnp.float32))
 
     def _cluster_mean_stats(self, stats: jax.Array) -> jax.Array:
+        # cluster_ids is static config, so the segment count m is a Python int
+        # and every shape below is known at trace time (scan/jit safe).
+        if not self.cluster_ids:
+            return stats  # degenerate clustering: vanilla K-Vib statistics
         cid = jnp.asarray(self.cluster_ids, jnp.int32)
         m = int(max(self.cluster_ids)) + 1
         sums = jnp.zeros((m,), jnp.float32).at[cid].add(stats)
@@ -468,8 +451,6 @@ class ClusteredKVib(Sampler):
         return (sums / jnp.maximum(cnts, 1.0))[cid]
 
     def probabilities(self, state: SamplerState) -> jax.Array:
-        from repro.core import solver
-
         gamma = jnp.maximum(state.aux[0], 1e-12)
         pooled = self._cluster_mean_stats(state.stats)
         scores = jnp.sqrt(pooled + gamma)
@@ -493,5 +474,22 @@ class ClusteredKVib(Sampler):
         return SamplerState(stats=stats, aux=aux, t=state.t + 1)
 
 
-_REGISTRY["osmd"] = Osmd
-_REGISTRY["clustered_kvib"] = ClusteredKVib
+_REGISTRY = {
+    "uniform_isp": UniformISP,
+    "uniform_rsp": UniformRSP,
+    "kvib": KVib,
+    "vrb": Vrb,
+    "mabs": Mabs,
+    "avare": Avare,
+    "optimal_isp": OptimalISP,
+    "osmd": Osmd,
+    "clustered_kvib": ClusteredKVib,
+}
+
+
+def make_sampler(name: str, n: int, budget: int, **kw) -> Sampler:
+    try:
+        cls = _REGISTRY[name]
+    except KeyError as e:
+        raise ValueError(f"unknown sampler {name!r}; options: {sorted(_REGISTRY)}") from e
+    return cls(n=n, budget=budget, **kw)

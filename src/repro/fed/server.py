@@ -1,15 +1,31 @@
 """Federated server loop (Algorithm 1) — simulation-scale driver.
 
-Two execution modes:
+Two execution modes share ONE round body (``_build_round_body``):
+
+* ``compiled=True`` (default): the entire training run — all-clients local
+  update, sampler probabilities/sample/update, unbiased aggregation, server
+  optimizer apply, and metric accumulation (loss, estimator squared error,
+  cohort size, per-round online costs ``l_t(p^t)`` / ``min_p l_t(p)``) —
+  executes as a single jitted ``jax.lax.scan`` over rounds with donated
+  params/opt/sampler state.  Metrics live in on-device (T,)-stacked buffers
+  and the ``History`` is materialized once at the end: zero host round-trips
+  per round instead of the reference loop's 5+.
+* ``compiled=False``: the same body is jitted and dispatched one round at a
+  time from Python with per-round host syncs — the debuggable reference loop
+  (prints, breakpoints, and per-round inspection work).
+
+Because both modes run the identical traced computation, they produce
+bit-identical parameters and metrics (see tests/test_scan_server.py).
+
+Two metric fidelities:
 
 * ``oracle_metrics=True``: every round computes *all* clients' local updates
   (vmapped) so the paper's diagnostics — dynamic regret (eq. 8), estimator
   variance (eq. 2), sampling quality — are exact.  This is how the paper's
   figures are generated (the oracle is a property of the simulation, not of
   the deployed server).
-* ``oracle_metrics=False``: only the sampled cohort computes (padded to a
-  static buffer), which is the deployable configuration; metrics are limited
-  to what a real server can observe.
+* ``oracle_metrics=False``: diagnostics requiring full feedback are skipped;
+  metrics are limited to what a real server can observe.
 
 The pod-scale distributed round lives in ``repro.fed.round`` and
 ``repro.launch`` — this module is the algorithmic reference loop and is what
@@ -20,13 +36,12 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import estimator, samplers
+from repro.core import estimator, regret, samplers
 from repro.core.regret import RegretTracker
 from repro.fed import client as fed_client
 from repro.fed.tasks import Task
@@ -47,6 +62,7 @@ class FedConfig:
     eval_every: int = 5
     eval_batches: int = 4
     oracle_metrics: bool = True
+    compiled: bool = True  # False: per-round Python dispatch (debug/reference)
 
 
 @dataclasses.dataclass
@@ -76,29 +92,100 @@ class History:
         return out
 
 
-def _all_client_round(task: Task, dataset, local_steps: int, batch_size: int, local_lr: float):
-    """Build the jitted all-clients local-update function (oracle mode)."""
+def _build_all_clients(task: Task, dataset, cfg: FedConfig):
+    """All-clients local-update step (oracle mode): vmapped over clients."""
 
     lam = dataset.lam
+    n = dataset.n_clients
 
-    @jax.jit
-    def round_fn(params, key):
-        n = dataset.n_clients
-        keys = jax.random.split(key, n * local_steps).reshape(n, local_steps, 2)
+    def all_clients(params, key):
+        keys = jax.random.split(key, n * cfg.local_steps).reshape(n, cfg.local_steps, 2)
 
         def one_client(i, ks):
             def get_batch(k):
-                return dataset.client_batch(i, k, batch_size)
+                return dataset.client_batch(i, k, cfg.batch_size)
 
             batches = jax.vmap(get_batch)(ks)
-            delta, loss = fed_client.local_update(params, task.loss, batches, local_lr)
+            delta, loss = fed_client.local_update(params, task.loss, batches, cfg.local_lr)
             return delta, loss, fed_client.update_norm(delta)
 
-        deltas, losses, norms = jax.vmap(one_client)(jnp.arange(dataset.n_clients), keys)
+        deltas, losses, norms = jax.vmap(one_client)(jnp.arange(n), keys)
         feedback = lam * norms  # pi_t(i) = lambda_i ||g_i||
         return deltas, losses, feedback
 
-    return round_fn
+    return all_clients
+
+
+def _build_round_body(task: Task, dataset, sampler: samplers.Sampler, cfg: FedConfig, eval_data):
+    """One federated round as a scan body: (carry, (t, k_data, k_sample)) ->
+    (carry, per-round metrics dict).  Pure and shape-static, so it runs
+    identically under ``lax.scan`` and under per-round ``jit`` dispatch."""
+
+    lam = dataset.lam
+    all_clients = _build_all_clients(task, dataset, cfg)
+
+    def body(carry, xs):
+        params, opt_state, s_state = carry
+        t, k_data, k_sample = xs
+        deltas, losses, feedback_full = all_clients(params, k_data)
+
+        # Solve p~ once; reuse it for the draw AND the regret diagnostics
+        # (the seed loop solved twice and diagnosed off draw.marginals).
+        p_marg = sampler.probabilities(s_state)
+        draw = sampler.sample_from(p_marg, k_sample)
+        weights = estimator.client_weights(draw, lam, sampler.procedure, sampler.budget)
+        d_est, sq_err = estimator.aggregate_and_error(deltas, weights, lam)
+        params, opt_state = cfg.server_opt.apply(params, d_est, opt_state)
+
+        # The server only observes sampled feedback (Theorem 5.2's partial
+        # feedback): mask before the sampler update.
+        s_state = sampler.update(s_state, draw, feedback_full * draw.mask)
+
+        metrics = {
+            "train_loss": jnp.sum(lam * losses),
+            "cohort_size": draw.size,
+        }
+        if cfg.oracle_metrics:
+            if sampler.procedure == "isp":
+                p_eff = p_marg
+            else:
+                # K x per-draw distribution approximates the inclusion
+                # marginal; clip to (0, 1] so degenerate draws (K q_i > 1)
+                # cannot corrupt the regret/quality-gap diagnostics.
+                p_eff = jnp.clip(sampler.budget * draw.draw_probs, 1e-30, 1.0)
+            cost, opt_cost = regret.round_costs(feedback_full, p_eff, sampler.budget)
+            metrics.update(
+                sq_error=sq_err, cost=cost, opt_cost=opt_cost, scores=feedback_full
+            )
+        if eval_data is not None:
+            do_eval = (t % cfg.eval_every == 0) | (t == cfg.rounds - 1)
+            metrics["accuracy"] = jax.lax.cond(
+                do_eval,
+                lambda p: task.accuracy(p, eval_data).astype(jnp.float32),
+                lambda p: jnp.full((), jnp.nan, jnp.float32),
+                params,
+            )
+        return (params, opt_state, s_state), metrics
+
+    return body
+
+
+def _materialize_history(metrics: dict, cfg: FedConfig, has_eval: bool) -> History:
+    """One host transfer at the end of the run: stacked device buffers ->
+    the History lists the analysis/plotting code expects."""
+    hist = History(regret=RegretTracker(budget=cfg.budget))
+    hist.rounds = list(range(cfg.rounds))
+    hist.train_loss = [float(x) for x in np.asarray(metrics["train_loss"])]
+    hist.cohort_size = [int(x) for x in np.asarray(metrics["cohort_size"])]
+    if cfg.oracle_metrics:
+        hist.estimator_sq_error = [float(x) for x in np.asarray(metrics["sq_error"])]
+        hist.regret = RegretTracker.from_arrays(
+            cfg.budget, metrics["cost"], metrics["opt_cost"], metrics["scores"]
+        )
+    if has_eval:
+        acc = np.asarray(metrics["accuracy"])
+        hist.test_accuracy = [float(a) for a in acc[~np.isnan(acc)]]
+    return hist
 
 
 def run_federated(
@@ -114,56 +201,67 @@ def run_federated(
     params = task.init(init_key)
     opt_state = cfg.server_opt.init(params)
     s_state = sampler.init()
-    lam = dataset.lam
 
-    hist = History(regret=RegretTracker(budget=cfg.budget))
-    round_fn = _all_client_round(task, dataset, cfg.local_steps, cfg.batch_size, cfg.local_lr)
+    # Per-round (k_data, k_sample) pairs, derived up front with the reference
+    # loop's chained `key, k_data, k_sample = split(key, 3)` sequence so both
+    # execution paths (and the pre-scan history of this repo) consume the
+    # identical randomness stream.
+    @functools.partial(jax.jit, static_argnames=("rounds",))
+    def derive_keys(key, rounds):
+        def step(k, _):
+            k, kd, ks = jax.random.split(k, 3)
+            return k, jnp.stack([kd, ks])
+        _, pairs = jax.lax.scan(step, key, None, length=rounds)
+        return pairs
 
-    apply_fn = jax.jit(
-        lambda p, d, o: cfg.server_opt.apply(p, d, o), donate_argnums=(0,)
-    )
+    round_keys = derive_keys(key, cfg.rounds)  # (T, 2, key_dim)
+    ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
 
-    @jax.jit
-    def estimate_fn(deltas, weights, feedback_masked):
-        d = estimator.aggregate_stacked(deltas, weights)
-        return d
+    body = _build_round_body(task, dataset, sampler, cfg, eval_data)
 
-    @jax.jit
-    def error_fn(deltas, weights):
-        d = estimator.aggregate_stacked(deltas, weights)
-        tgt = estimator.full_aggregate_stacked(deltas, lam)
-        return estimator.empirical_sq_error(d, tgt)
+    # Buffer donation frees the previous round's params/opt/sampler state in
+    # place; the CPU backend doesn't implement donation and warns, so gate it.
+    donate = (0, 1, 2) if jax.default_backend() != "cpu" else ()
 
-    eval_fn = jax.jit(lambda p, b: task.accuracy(p, b))
+    if cfg.compiled:
 
-    for t in range(cfg.rounds):
-        key, k_data, k_sample = jax.random.split(key, 3)
-        deltas, losses, feedback_full = round_fn(params, k_data)
+        @functools.partial(jax.jit, donate_argnums=donate)
+        def scan_all(params, opt_state, s_state, keys):
+            (params, opt_state, s_state), stacked = jax.lax.scan(
+                body, (params, opt_state, s_state), (ts, keys[:, 0], keys[:, 1])
+            )
+            return params, opt_state, s_state, stacked
 
-        p_marg = sampler.probabilities(s_state)
-        draw = sampler.sample(s_state, k_sample)
-        weights = estimator.client_weights(draw, lam, sampler.procedure, sampler.budget)
-        d_est = estimate_fn(deltas, weights, feedback_full * draw.mask)
-        params, opt_state = apply_fn(params, d_est, opt_state)
+        params, opt_state, s_state, stacked = scan_all(
+            params, opt_state, s_state, round_keys
+        )
+        jax.block_until_ready(stacked)
+        metrics = jax.tree_util.tree_map(np.asarray, stacked)
+    else:
+        step = jax.jit(body, donate_argnums=(0,) if donate else ())
+        per_round = []
+        for t in range(cfg.rounds):
+            carry, m = step(
+                (params, opt_state, s_state),
+                (ts[t], round_keys[t, 0], round_keys[t, 1]),
+            )
+            params, opt_state, s_state = carry
+            # Host sync every round — the reference loop's defining trait.
+            per_round.append(jax.tree_util.tree_map(np.asarray, m))
+        if per_round:
+            metrics = {k: np.stack([m[k] for m in per_round]) for k in per_round[0]}
+        else:
+            metrics = {"train_loss": np.zeros(0), "cohort_size": np.zeros(0, np.int32)}
+            if cfg.oracle_metrics:
+                metrics.update(
+                    sq_error=np.zeros(0),
+                    cost=np.zeros(0),
+                    opt_cost=np.zeros(0),
+                    scores=np.zeros((0, dataset.n_clients)),
+                )
+            if eval_data is not None:
+                metrics["accuracy"] = np.zeros(0)
 
-        # The server only observes sampled feedback (Theorem 5.2's partial
-        # feedback): mask before the sampler update.
-        s_state = sampler.update(s_state, draw, feedback_full * draw.mask)
-
-        # ---- diagnostics (oracle side) ----
-        if cfg.oracle_metrics:
-            if sampler.procedure == "isp":
-                p_eff = draw.marginals
-            else:
-                p_eff = sampler.budget * draw.draw_probs
-            hist.regret.record(feedback_full, p_eff)
-            hist.estimator_sq_error.append(float(error_fn(deltas, weights)))
-        hist.cohort_size.append(int(draw.size))
-        hist.rounds.append(t)
-        hist.train_loss.append(float(jnp.sum(lam * losses)))
-
-        if eval_data is not None and (t % cfg.eval_every == 0 or t == cfg.rounds - 1):
-            hist.test_accuracy.append(float(eval_fn(params, eval_data)))
-
+    hist = _materialize_history(metrics, cfg, has_eval=eval_data is not None)
     hist.wall_time_s = time.time() - t0
     return hist

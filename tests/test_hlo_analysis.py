@@ -5,6 +5,10 @@ import textwrap
 
 import pytest
 
+# Every case spawns a fresh-interpreter probe (jax import + XLA compile with a
+# forced device count) — minutes apiece on CPU hosts.  Opt in with `-m slow`.
+pytestmark = pytest.mark.slow
+
 # HLO parsing/compiling with forced device counts must not pollute the test
 # process's jax state -> run probes in a subprocess and parse printed metrics.
 

@@ -7,7 +7,7 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.fused_weighted_agg import fused_weighted_agg
+from repro.kernels.fused_weighted_agg import fused_multi_weighted_agg, fused_weighted_agg
 from repro.kernels.rmsnorm import rmsnorm
 from repro.kernels.ssd_scan import ssd_scan
 
@@ -111,6 +111,18 @@ def test_fused_weighted_agg_sweep(dtype, c, d, bd):
     tol = dict(rtol=2e-2, atol=1e-2) if dtype == BF16 else dict(rtol=1e-5, atol=1e-4)
     np.testing.assert_allclose(np.asarray(d_got), np.asarray(d_want), **tol)
     np.testing.assert_allclose(np.asarray(sq_got), np.asarray(sq_want), **tol)
+
+
+@pytest.mark.parametrize("dtype", [F32, BF16])
+@pytest.mark.parametrize("m,c,d,bd", [(2, 8, 4096, 1024), (3, 16, 2048, 2048)])
+def test_fused_multi_weighted_agg_sweep(dtype, m, c, d, bd):
+    """M weighted aggregates in one pass == M separate matvec reductions."""
+    g = jax.random.normal(jax.random.PRNGKey(0), (c, d), dtype)
+    w = jax.random.uniform(jax.random.PRNGKey(1), (m, c), jnp.float32)
+    got = fused_multi_weighted_agg(g, w, block_d=bd, interpret=True)
+    want = w @ g.astype(jnp.float32)
+    tol = dict(rtol=2e-2, atol=1e-2) if dtype == BF16 else dict(rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol)
 
 
 @pytest.mark.parametrize("dtype", [F32, BF16])

@@ -36,6 +36,7 @@ def test_sw_variant_decode_consistency():
     )
 
 
+@pytest.mark.slow  # fresh-interpreter CLI: jax import + model compile per run
 def test_train_cli_end_to_end(tmp_path):
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.train",
@@ -54,6 +55,7 @@ def test_train_cli_end_to_end(tmp_path):
     assert all(np.isfinite(losses)) and len(losses) == 3
 
 
+@pytest.mark.slow  # fresh-interpreter CLI: jax import + model compile per run
 def test_serve_cli_end_to_end():
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.serve",

@@ -94,6 +94,7 @@ _A2A_PROBE = textwrap.dedent(
 )
 
 
+@pytest.mark.slow  # fresh-interpreter probe + multi-device MoE compile (~8 min)
 def test_moe_a2a_matches_dense_subprocess():
     import json
 

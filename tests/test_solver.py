@@ -1,9 +1,11 @@
-"""Unit + property tests for the water-filling solvers (Lemmas 2.2/5.1/B.8)."""
+"""Unit + property-style tests for the water-filling solvers (Lemmas
+2.2/5.1/B.8).  Property sweeps draw (n, K, scale, scores) from seeded
+generators across a wide grid of seeds — same invariants the hypothesis
+versions checked, no external dependency."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import solver
 
@@ -41,6 +43,20 @@ def test_floor_is_respected():
     assert abs(float(p.sum()) - 2.0) < 1e-5
 
 
+@pytest.mark.parametrize("seed", range(12))
+def test_floor_property_sweep(seed):
+    """Lemma 5.1: p in [p_min, 1] and sum(p) == K for random score vectors."""
+    rng = np.random.default_rng(3000 + seed)
+    n = int(rng.integers(4, 200))
+    k = float(max(1.0, rng.uniform(0.05, 0.5) * n))
+    p_min = float(rng.uniform(0.0, 0.5) * k / n)  # paper regime: p_min <= K/(2N)
+    a = jax.random.uniform(jax.random.PRNGKey(seed), (n,), minval=1e-5, maxval=10.0)
+    p = solver.isp_probabilities(a, k, p_min=p_min)
+    assert float(p.min()) >= p_min - 1e-6
+    assert float(p.max()) <= 1.0 + 1e-6
+    assert abs(float(p.sum()) - k) < max(1e-3, 1e-4 * k)
+
+
 def test_mixing_strategy():
     """eq. 12: floor theta*K/N, budget preserved."""
     p = jnp.array([0.0, 0.5, 1.0, 0.5])  # sums to 2
@@ -49,15 +65,13 @@ def test_mixing_strategy():
     assert float(mixed.min()) >= 0.4 * 2.0 / 4 - 1e-7
 
 
-@settings(max_examples=60, deadline=None)
-@given(
-    seed=st.integers(0, 2**31 - 1),
-    n=st.integers(2, 300),
-    frac=st.floats(0.01, 1.0),
-    scale=st.floats(0.01, 100.0),
-)
-def test_isp_constraints_property(seed, n, frac, scale):
+@pytest.mark.parametrize("seed", range(60))
+def test_isp_constraints_property(seed):
     """sum(p) == K, p in (0, 1], for arbitrary positive scores."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 301))
+    frac = float(rng.uniform(0.01, 1.0))
+    scale = float(rng.uniform(0.01, 100.0))
     k = max(1.0, frac * n)
     a = (
         jax.random.uniform(jax.random.PRNGKey(seed), (n,), minval=1e-6, maxval=1.0)
@@ -70,11 +84,13 @@ def test_isp_constraints_property(seed, n, frac, scale):
     assert float(jnp.min(p)) > 0.0
 
 
-@settings(max_examples=40, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1), n=st.integers(3, 100), k=st.integers(1, 50))
-def test_isp_kkt_property(seed, n, k):
+@pytest.mark.parametrize("seed", range(40))
+def test_isp_kkt_property(seed):
     """KKT: on the interior, a_i/p_i is constant; capped clients have larger
     a_i than the implied water level."""
+    rng = np.random.default_rng(1000 + seed)
+    n = int(rng.integers(3, 101))
+    k = int(rng.integers(1, 51))
     k = min(k, n - 1)
     a = jax.random.uniform(jax.random.PRNGKey(seed), (n,), minval=0.01, maxval=1.0)
     p = np.asarray(solver.isp_probabilities(a, float(k)))
@@ -87,12 +103,12 @@ def test_isp_kkt_property(seed, n, k):
             assert a[~interior].min() >= levels.mean() * (1 - 1e-3)
 
 
-@settings(max_examples=30, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1), n=st.integers(3, 60))
-def test_isp_beats_rsp_cost_property(seed, n):
+@pytest.mark.parametrize("seed", range(30))
+def test_isp_beats_rsp_cost_property(seed):
     """The ISP solution's cost is never above the RSP solution's cost
     (Lemma 2.1: ISP variance minimizes the bound; both evaluated in the
     shared objective sum a^2/p)."""
+    n = int(np.random.default_rng(2000 + seed).integers(3, 61))
     a = jax.random.uniform(jax.random.PRNGKey(seed), (n,), minval=0.01, maxval=1.0)
     k = max(2.0, 0.3 * n)
     c_isp = float(solver.expected_cost(a, solver.isp_probabilities(a, k)))
@@ -100,8 +116,7 @@ def test_isp_beats_rsp_cost_property(seed, n):
     assert c_isp <= c_rsp * (1 + 1e-4)
 
 
-@settings(max_examples=30, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1))
+@pytest.mark.parametrize("seed", range(30))
 def test_optimal_cost_closed_form(seed):
     """eq. 39: when nothing saturates, min cost = (sum a)^2 / K."""
     a = jax.random.uniform(jax.random.PRNGKey(seed), (64,), minval=0.5, maxval=1.0)
