@@ -155,6 +155,55 @@ def bench_fed_round_scan() -> None:
 
 
 # ---------------------------------------------------------------------------
+# Table: deployable cohort-only round vs oracle all-clients round (O(C) vs O(N))
+# ---------------------------------------------------------------------------
+
+
+def bench_fed_round_cohort() -> None:
+    """us/round vs N at fixed K for the two metric fidelities of fed/server.py:
+    oracle (trains all N clients, O(N) local-update compute) vs deployable
+    (trains only the static C-slot cohort, O(C) local-update compute plus
+    O(N) sampler/scatter bookkeeping).  Oracle grows linearly in N; the
+    deployable curve should stay roughly flat.  Emits the per-N pairs to
+    ``RESULTS/BENCH_fed_round_cohort.json`` so the perf trajectory records
+    deployable-mode us/round across PRs."""
+    from repro.core import make_sampler
+    from repro.data import synthetic_classification
+    from repro.fed import FedConfig, logistic_regression
+    from repro.fed import server as fed_server
+
+    k, c = 10, 20
+    task = logistic_regression()
+    entries = []
+    for n in (64, 256, 1024):
+        ds = synthetic_classification(n_clients=n, total=40 * n, seed=0)
+        sampler = make_sampler("kvib", n=n, budget=k, horizon=100)
+        params = task.init(jax.random.PRNGKey(0))
+        xs = (jnp.zeros((), jnp.int32), jax.random.PRNGKey(1), jax.random.PRNGKey(2))
+        us = {}
+        for mode, cfg in (
+            ("oracle", FedConfig(budget=k, local_steps=1, batch_size=16)),
+            (
+                "deployable",
+                FedConfig(budget=k, local_steps=1, batch_size=16,
+                          oracle_metrics=False, cohort=c),
+            ),
+        ):
+            body = fed_server._build_round_body(task, ds, sampler, cfg, None)
+            carry = (params, cfg.server_opt.init(params), sampler.init())
+            us[mode] = _timeit(jax.jit(body), carry, xs, reps=10, warmup=2)
+            row(f"fed_round_cohort_n{n}_{mode}", us[mode], f"K={k} C={c} one round body")
+        entries.append(
+            {"n": n, "budget": k, "cohort": c,
+             "oracle_us": us["oracle"], "deployable_us": us["deployable"],
+             "oracle_over_deployable": us["oracle"] / us["deployable"]}
+        )
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "BENCH_fed_round_cohort.json"), "w") as f:
+        json.dump({"bench": "fed_round_cohort", "entries": entries}, f, indent=2)
+
+
+# ---------------------------------------------------------------------------
 # Paper figures from experiment artifacts
 # ---------------------------------------------------------------------------
 
@@ -246,6 +295,7 @@ BENCHES = {
     "fused_agg": bench_fused_aggregation,
     "round_step": bench_round_step,
     "fed_round_scan": bench_fed_round_scan,
+    "fed_round_cohort": bench_fed_round_cohort,
     "fig2": table_synthetic,
     "fig3b": table_budget,
     "fig4": table_femnist,

@@ -9,9 +9,11 @@ Public API:
 from repro.core import estimator, regret, samplers, solver
 from repro.core.samplers import (
     Avare,
+    ClusteredKVib,
     KVib,
     Mabs,
     OptimalISP,
+    Osmd,
     SampleResult,
     Sampler,
     SamplerState,
@@ -28,9 +30,11 @@ __all__ = [
     "samplers",
     "solver",
     "Avare",
+    "ClusteredKVib",
     "KVib",
     "Mabs",
     "OptimalISP",
+    "Osmd",
     "SampleResult",
     "Sampler",
     "SamplerState",

@@ -45,6 +45,8 @@ __all__ = [
     "Mabs",
     "Avare",
     "OptimalISP",
+    "Osmd",
+    "ClusteredKVib",
     "make_sampler",
 ]
 

@@ -1,10 +1,13 @@
 from repro.fed.client import local_update, update_norm
+from repro.fed.cohort import CohortSelection, select_cohort
 from repro.fed.server import FedConfig, History, run_federated
 from repro.fed.tasks import Task, logistic_regression, mlp_classifier, tiny_lm
 
 __all__ = [
     "local_update",
     "update_norm",
+    "CohortSelection",
+    "select_cohort",
     "FedConfig",
     "History",
     "run_federated",

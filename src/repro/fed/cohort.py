@@ -1,0 +1,168 @@
+"""Shared padded-cohort contract: selection, padding, and weight semantics.
+
+Every execution substrate — the compiled single-host server loop
+(``fed/server.py``), the pod-scale round step (``fed/round.py``), and the
+distributed launcher (``repro.launch.train``) — consumes the SAME static
+C-slot cohort representation defined here, so the unbiasedness argument is
+proved once and holds everywhere.
+
+Contract
+--------
+A round's ISP/RSP draw produces a stochastic included set ``S`` (the
+``mask``).  ``select_cohort`` maps it onto a **static buffer of C slots**:
+
+* ids      — (C,) int32 client indices.  The first ``min(|S|, C)`` slots (in
+  random-priority order, see *overflow*) point at included clients; the
+  remaining *padding* slots point at arbitrary non-included clients.
+* valid    — (C,) bool, True exactly for the slots holding included clients.
+  Padding slots are **inert**: their weight is zero, their feedback is zero,
+  and hosts must not gather real data for them (``host_gather_cohort_batches``
+  fills them with zeros; the compiled path zeroes their outputs before the
+  scatter).  A padding slot therefore contributes nothing to the estimate,
+  the feedback, or the loss metric — only dead static-shape compute.
+* weights  — (C,) f32 estimator coefficients ``w_c = m_c lambda_c / p~_c``
+  (zero on padding).  ``sum_slots w_c * delta_c`` is the unbiased estimate
+  of the full-participation update (Definition 2.1).
+
+Overflow
+--------
+``|S|`` is stochastic under ISP; when ``|S| > C`` the buffer cannot hold the
+draw.  Selection keeps a *uniformly random* size-C subset of ``S`` (i.i.d.
+uniform priorities + ``lax.top_k``) and **rescales every retained weight by
+``|S|/C``** — the inverse of the acceptance probability ``C/|S|`` — so the
+estimator stays unbiased:
+
+    E[ sum_kept (|S|/C) w_i delta_i | S ] = sum_{i in S} w_i delta_i.
+
+(The pre-fix launcher kept the original weights after dropping, which biased
+the estimate low by a factor ``C/|S|`` on overflow rounds.)  Dropped clients
+are reported in ``n_dropped``; they receive no feedback this round (the
+server genuinely did not contact them), which the bandit samplers treat as
+an observed zero — the same partial-feedback semantics as any unsampled
+client.
+
+Determinism
+-----------
+When ``|S| <= C`` the selection keeps *all* of ``S`` with weights bitwise
+equal to the full-mask weights (rescale is exactly 1.0), so a cohort-only
+round reproduces the full-mask round bit-for-bit (tests/test_scan_server.py).
+All functions are shape-static and trace-safe (usable inside ``lax.scan``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "CohortSelection",
+    "select_cohort",
+    "scatter_cohort",
+    "weighted_delta_sum",
+    "host_gather_cohort_batches",
+]
+
+
+class CohortSelection(NamedTuple):
+    """Static C-slot cohort (see module docstring for the full contract)."""
+
+    ids: jax.Array  # (C,) int32 client index per slot
+    weights: jax.Array  # (C,) f32 estimator weight per slot (0 on padding)
+    valid: jax.Array  # (C,) bool slot holds an included client
+    n_included: jax.Array  # scalar int32 |S| (pre-overflow)
+    n_dropped: jax.Array  # scalar int32 max(|S| - C, 0)
+
+
+def select_cohort(
+    mask: jax.Array, weights: jax.Array, cohort: int, key: jax.Array
+) -> CohortSelection:
+    """Map an (N,) inclusion mask + full weight vector onto C static slots.
+
+    ``lax.top_k`` over i.i.d. uniform priorities (masked-out clients get -1)
+    keeps all of S when ``|S| <= C`` and a uniformly random size-C subset on
+    overflow, with retained weights rescaled by ``|S|/C`` (unbiased; module
+    docstring).  Scan/jit-safe: ``cohort`` must be a static Python int.
+    """
+    n = mask.shape[0]
+    c = int(min(int(cohort), n))
+    priority = jnp.where(mask, jax.random.uniform(key, (n,)), -1.0)
+    _, ids = jax.lax.top_k(priority, c)
+    ids = ids.astype(jnp.int32)
+    valid = mask[ids]
+    n_inc = jnp.sum(mask.astype(jnp.int32))
+    # rescale == exactly 1.0 when there is no overflow (x * 1.0 is bitwise x),
+    # so the no-overflow cohort weights match the full-mask weights exactly.
+    rescale = jnp.where(n_inc > c, n_inc.astype(jnp.float32) / c, 1.0)
+    w = jnp.where(valid, weights[ids].astype(jnp.float32) * rescale, 0.0)
+    n_kept = jnp.sum(valid.astype(jnp.int32))
+    return CohortSelection(
+        ids=ids, weights=w, valid=valid, n_included=n_inc, n_dropped=n_inc - n_kept
+    )
+
+
+def scatter_cohort(values, sel: CohortSelection, n: int):
+    """(C, ...)-stacked pytree -> (N, ...) with zeros for non-cohort clients.
+
+    Padding slots are zeroed before the scatter (inert contract), so a padded
+    slot aliasing a real client's index cannot corrupt that client's row.
+    Slot ids from ``select_cohort`` are distinct, so ``add`` never collides on
+    valid rows and the scattered values are bitwise the slot values.
+    """
+
+    def one(leaf):
+        keep = sel.valid.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        v = jnp.where(keep, leaf, jnp.zeros((), leaf.dtype))
+        return jnp.zeros((n,) + leaf.shape[1:], leaf.dtype).at[sel.ids].add(v)
+
+    return jax.tree_util.tree_map(one, values)
+
+
+def weighted_delta_sum(deltas, w: jax.Array):
+    """``sum_c w_c * delta_c`` over a stacked (C, ...) pytree, f32 accumulate.
+
+    The single aggregation primitive of the padded-cohort contract: with
+    ``w`` from ``select_cohort`` this is the unbiased estimate ``d^t``; with
+    ``w = lambda`` it is the full-participation target.
+    """
+
+    def one(leaf):
+        wc = w.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(wc * leaf.astype(jnp.float32), axis=0)
+
+    return jax.tree_util.tree_map(one, deltas)
+
+
+def host_gather_cohort_batches(
+    dataset, sel: CohortSelection, k_data: jax.Array, local_steps: int, batch_size: int
+):
+    """Host-side padded batch gather for the launcher: (C, R, B, ...) buffers.
+
+    Valid slots gather their client's R local batches (keys derived by
+    ``fold_in(k_data, client_id)`` so the stream is slot-order independent);
+    padding slots are all-zero and cost no gather — the inert-padding
+    contract (their weight is zero, so the zeros never reach the estimate).
+    """
+    ids = np.asarray(sel.ids)
+    valid = np.asarray(sel.valid)
+    zero_feat = np.zeros(
+        (local_steps, batch_size) + tuple(dataset.features.shape[2:]),
+        jnp.asarray(dataset.features).dtype,
+    )
+    zero_lab = np.zeros(
+        (local_steps, batch_size) + tuple(dataset.labels.shape[2:]),
+        jnp.asarray(dataset.labels).dtype,
+    )
+    feats, labs = [], []
+    for slot in range(len(ids)):
+        if not valid[slot]:
+            feats.append(zero_feat)
+            labs.append(zero_lab)
+            continue
+        cid = int(ids[slot])
+        keys = jax.random.split(jax.random.fold_in(k_data, cid), local_steps)
+        batches = [dataset.client_batch(cid, kr, batch_size) for kr in keys]
+        feats.append(np.stack([np.asarray(f) for f, _ in batches]))
+        labs.append(np.stack([np.asarray(l) for _, l in batches]))
+    return jnp.asarray(np.stack(feats)), jnp.asarray(np.stack(labs))

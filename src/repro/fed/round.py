@@ -15,11 +15,13 @@ Both produce:
                 d^t = sum_c w_c * (x^t - x_c^{t,R}),  w_c = m_c lambda_c / p~_c
   feedback    — pi_t(c) = ||delta_c||  (weights applied by the server, which
                 knows lambda; the norm rides the aggregation pass)
-  mean loss.
+  mean loss over the active (w != 0) cohort slots — padding is inert.
 
 The round consumes a *static padded cohort* of size C with the inclusion
 mask folded into w (w_c = 0 for padding) — ISP's stochastic |S^t| maps onto
-fixed TPU shapes this way (DESIGN.md section 6.1).
+fixed TPU shapes this way.  Selection/padding/weight semantics live in
+``repro.fed.cohort`` (the shared contract with the compiled server loop and
+the launcher); this module is the device-side consumer of that contract.
 """
 from __future__ import annotations
 
@@ -29,6 +31,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.fed.cohort import weighted_delta_sum
 from repro.models import transformer
 from repro.models.common import ArchConfig
 
@@ -41,15 +44,6 @@ class RoundSpec:
     local_steps: int  # R
     local_lr: float = 0.02
     server_lr: float = 1.0
-
-
-def _tree_weighted_sum(deltas, w):
-    """sum_c w_c * delta_c over a stacked (C, ...) pytree."""
-    def one(leaf):
-        wc = w.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
-        return jnp.sum(wc * leaf.astype(jnp.float32), axis=0)
-
-    return jax.tree_util.tree_map(one, deltas)
 
 
 def _tree_sq_norm(delta):
@@ -94,6 +88,14 @@ def build_round_step(cfg: ArchConfig, spec: RoundSpec, constrain=None) -> Callab
         delta, loss = _local_train(params, cfg, batches, spec.local_lr)
         return delta, loss, jnp.sqrt(_tree_sq_norm(delta))
 
+    def cohort_mean_loss(losses, weights):
+        # Padding slots (w == 0) hold inert all-zero batches; their loss is
+        # meaningless and must not pollute the round's reported loss.
+        active = weights != 0.0
+        return jnp.sum(jnp.where(active, losses, 0.0)) / jnp.maximum(
+            jnp.sum(active.astype(jnp.float32)), 1.0
+        )
+
     if mode == "client_parallel":
 
         def round_step(params, tokens, targets, weights, aux_embeds=None):
@@ -106,11 +108,11 @@ def build_round_step(cfg: ArchConfig, spec: RoundSpec, constrain=None) -> Callab
                 )(tokens, targets)
             else:
                 deltas, losses, norms = jax.vmap(one)(tokens, targets, aux_embeds)
-            d = _tree_weighted_sum(deltas, weights)
+            d = weighted_delta_sum(deltas, weights)
             new_params = jax.tree_util.tree_map(
                 lambda p, g: p - spec.server_lr * g.astype(p.dtype), params, d
             )
-            return new_params, norms, jnp.mean(losses)
+            return new_params, norms, cohort_mean_loss(losses, weights)
 
         return round_step
 
@@ -145,7 +147,7 @@ def build_round_step(cfg: ArchConfig, spec: RoundSpec, constrain=None) -> Callab
             new_params = jax.tree_util.tree_map(
                 lambda p, g: p - spec.server_lr * g.astype(p.dtype), params, d
             )
-            return new_params, norms, jnp.mean(losses)
+            return new_params, norms, cohort_mean_loss(losses, weights)
 
         return round_step
 

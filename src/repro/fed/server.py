@@ -24,8 +24,18 @@ Two metric fidelities:
   variance (eq. 2), sampling quality — are exact.  This is how the paper's
   figures are generated (the oracle is a property of the simulation, not of
   the deployed server).
-* ``oracle_metrics=False``: diagnostics requiring full feedback are skipped;
-  metrics are limited to what a real server can observe.
+* ``oracle_metrics=False`` (deployable mode): the round trains ONLY a static
+  C-slot cohort (``FedConfig.cohort``) selected from the ISP draw inside the
+  traced body via ``fed.cohort.select_cohort`` — local-update compute is
+  O(C) per round instead of O(N), which is the whole point of expected-K
+  client sampling.  Overflow (``|S| > C``) drops to a uniform size-C subset
+  with weights rescaled by ``|S|/C`` so the estimate stays unbiased; when
+  ``|S| <= C`` the round is bit-identical to the full-mask computation
+  (tests/test_scan_server.py).  Diagnostics requiring full feedback are
+  skipped; ``train_loss`` is the importance-weighted cohort estimate of the
+  full weighted loss (unbiased, but noisier than the oracle's exact value),
+  ``cohort_size`` counts the clients actually contacted (post-drop), and
+  ``History.cohort_dropped`` records the per-round overflow drops.
 
 The pod-scale distributed round lives in ``repro.fed.round`` and
 ``repro.launch`` — this module is the algorithmic reference loop and is what
@@ -44,6 +54,7 @@ import numpy as np
 from repro.core import estimator, regret, samplers
 from repro.core.regret import RegretTracker
 from repro.fed import client as fed_client
+from repro.fed import cohort as fed_cohort
 from repro.fed.tasks import Task
 from repro.optim.fedopt import FedAvgServer, ServerOptimizer
 
@@ -63,6 +74,13 @@ class FedConfig:
     eval_batches: int = 4
     oracle_metrics: bool = True
     compiled: bool = True  # False: per-round Python dispatch (debug/reference)
+    # Deployable-mode (oracle_metrics=False) static cohort buffer size C;
+    # None -> min(2 * budget, n_clients).  Ignored in oracle mode.
+    cohort: int | None = None
+
+    def cohort_slots(self, n_clients: int) -> int:
+        c = 2 * self.budget if self.cohort is None else int(self.cohort)
+        return max(1, min(c, n_clients))
 
 
 @dataclasses.dataclass
@@ -72,8 +90,10 @@ class History:
     test_accuracy: list = dataclasses.field(default_factory=list)
     estimator_sq_error: list = dataclasses.field(default_factory=list)
     cohort_size: list = dataclasses.field(default_factory=list)
+    cohort_dropped: list = dataclasses.field(default_factory=list)  # deployable
     regret: RegretTracker | None = None
     wall_time_s: float = 0.0
+    final_params: object = None  # trained parameter pytree (trajectory probe)
 
     def summary(self) -> dict:
         out = {
@@ -92,59 +112,136 @@ class History:
         return out
 
 
+def _build_client_step(task: Task, dataset, cfg: FedConfig):
+    """One client's local update: (params, client id, (R, 2) batch keys) ->
+    (delta, loss, update norm).  Shared by the oracle and deployable paths so
+    their per-client numerics cannot drift apart — cross-mode bit-identity
+    (tests/test_scan_server.py) depends on this being a single definition."""
+
+    def one_client(params, i, ks):
+        def get_batch(k):
+            return dataset.client_batch(i, k, cfg.batch_size)
+
+        batches = jax.vmap(get_batch)(ks)
+        delta, loss = fed_client.local_update(params, task.loss, batches, cfg.local_lr)
+        return delta, loss, fed_client.update_norm(delta)
+
+    return one_client
+
+
+def _split_batch_keys(key, n: int, local_steps: int):
+    """(N, R, 2) per-client batch keys — the one key stream both paths index."""
+    return jax.random.split(key, n * local_steps).reshape(n, local_steps, 2)
+
+
 def _build_all_clients(task: Task, dataset, cfg: FedConfig):
     """All-clients local-update step (oracle mode): vmapped over clients."""
 
     lam = dataset.lam
     n = dataset.n_clients
+    one_client = _build_client_step(task, dataset, cfg)
 
     def all_clients(params, key):
-        keys = jax.random.split(key, n * cfg.local_steps).reshape(n, cfg.local_steps, 2)
-
-        def one_client(i, ks):
-            def get_batch(k):
-                return dataset.client_batch(i, k, cfg.batch_size)
-
-            batches = jax.vmap(get_batch)(ks)
-            delta, loss = fed_client.local_update(params, task.loss, batches, cfg.local_lr)
-            return delta, loss, fed_client.update_norm(delta)
-
-        deltas, losses, norms = jax.vmap(one_client)(jnp.arange(n), keys)
+        keys = _split_batch_keys(key, n, cfg.local_steps)
+        deltas, losses, norms = jax.vmap(
+            lambda i, ks: one_client(params, i, ks)
+        )(jnp.arange(n), keys)
         feedback = lam * norms  # pi_t(i) = lambda_i ||g_i||
         return deltas, losses, feedback
 
     return all_clients
 
 
+def _build_cohort_clients(task: Task, dataset, cfg: FedConfig):
+    """Cohort-only local-update step (deployable mode): vmapped over the C
+    selected slots.  Batch keys are split for all N clients exactly as in
+    ``_build_all_clients`` and then gathered by client id, so a cohort
+    client's batches — and therefore its delta/loss/norm — are bit-identical
+    to what the oracle path computes for that client (key material is O(N)
+    but cheap; the O(N * local-train) compute is what this path removes)."""
+
+    n = dataset.n_clients
+    one_client = _build_client_step(task, dataset, cfg)
+
+    def cohort_clients(params, key, cohort_ids):
+        keys = _split_batch_keys(key, n, cfg.local_steps)
+        return jax.vmap(lambda i, ks: one_client(params, i, ks))(
+            cohort_ids, keys[cohort_ids]
+        )
+
+    return cohort_clients
+
+
 def _build_round_body(task: Task, dataset, sampler: samplers.Sampler, cfg: FedConfig, eval_data):
     """One federated round as a scan body: (carry, (t, k_data, k_sample)) ->
     (carry, per-round metrics dict).  Pure and shape-static, so it runs
-    identically under ``lax.scan`` and under per-round ``jit`` dispatch."""
+    identically under ``lax.scan`` and under per-round ``jit`` dispatch.
+
+    Oracle mode trains all N clients; deployable mode (oracle_metrics=False)
+    trains only the C-slot cohort selected from the draw (module docstring).
+    The deployable path scatters the cohort deltas/weights back to N-indexed
+    buffers and reuses the oracle path's exact aggregation contraction, so
+    when ``|S| <= C`` both modes produce bit-identical params and sampler
+    state (inserted zero terms cannot change the reduction's partial sums)."""
 
     lam = dataset.lam
-    all_clients = _build_all_clients(task, dataset, cfg)
+    n = dataset.n_clients
+    if cfg.oracle_metrics:
+        all_clients = _build_all_clients(task, dataset, cfg)
+    else:
+        c_slots = cfg.cohort_slots(n)
+        cohort_clients = _build_cohort_clients(task, dataset, cfg)
 
     def body(carry, xs):
         params, opt_state, s_state = carry
         t, k_data, k_sample = xs
-        deltas, losses, feedback_full = all_clients(params, k_data)
 
         # Solve p~ once; reuse it for the draw AND the regret diagnostics
         # (the seed loop solved twice and diagnosed off draw.marginals).
         p_marg = sampler.probabilities(s_state)
         draw = sampler.sample_from(p_marg, k_sample)
         weights = estimator.client_weights(draw, lam, sampler.procedure, sampler.budget)
-        d_est, sq_err = estimator.aggregate_and_error(deltas, weights, lam)
+
+        if cfg.oracle_metrics:
+            deltas, losses, feedback_full = all_clients(params, k_data)
+            agg_weights = weights
+            feedback = feedback_full * draw.mask
+            train_loss = jnp.sum(lam * losses)
+            cohort_size = draw.size
+        else:
+            # Deployable: select C slots from the draw (fold_in keeps the
+            # draw's key stream untouched), train only those clients, and
+            # scatter back to N-indexed buffers for the shared aggregation.
+            sel = fed_cohort.select_cohort(
+                draw.mask, weights, c_slots, jax.random.fold_in(k_sample, 1)
+            )
+            deltas_c, losses_c, norms_c = cohort_clients(params, k_data, sel.ids)
+            deltas = fed_cohort.scatter_cohort(deltas_c, sel, n)
+            agg_weights = fed_cohort.scatter_cohort(sel.weights, sel, n)
+            feedback = fed_cohort.scatter_cohort(
+                jnp.where(sel.valid, lam[sel.ids] * norms_c, 0.0), sel, n
+            )
+            # Unbiased cohort estimate of the full weighted loss sum_i lam_i l_i.
+            train_loss = jnp.sum(jnp.where(sel.valid, sel.weights * losses_c, 0.0))
+            # The clients actually contacted (post-overflow-drop), not |S|.
+            cohort_size = jnp.sum(sel.valid.astype(jnp.int32))
+
+        # sq_err is only meaningful in oracle mode (deployable deltas are
+        # zero off-cohort); the shared call keeps the d_est reduction
+        # bit-identical across modes and the dead row is fused away.
+        d_est, sq_err = estimator.aggregate_and_error(deltas, agg_weights, lam)
         params, opt_state = cfg.server_opt.apply(params, d_est, opt_state)
 
         # The server only observes sampled feedback (Theorem 5.2's partial
-        # feedback): mask before the sampler update.
-        s_state = sampler.update(s_state, draw, feedback_full * draw.mask)
+        # feedback): masked to the cohort it actually contacted.
+        s_state = sampler.update(s_state, draw, feedback)
 
         metrics = {
-            "train_loss": jnp.sum(lam * losses),
-            "cohort_size": draw.size,
+            "train_loss": train_loss,
+            "cohort_size": cohort_size,
         }
+        if not cfg.oracle_metrics:
+            metrics["dropped"] = sel.n_dropped
         if cfg.oracle_metrics:
             if sampler.procedure == "isp":
                 p_eff = p_marg
@@ -177,6 +274,8 @@ def _materialize_history(metrics: dict, cfg: FedConfig, has_eval: bool) -> Histo
     hist.rounds = list(range(cfg.rounds))
     hist.train_loss = [float(x) for x in np.asarray(metrics["train_loss"])]
     hist.cohort_size = [int(x) for x in np.asarray(metrics["cohort_size"])]
+    if "dropped" in metrics:
+        hist.cohort_dropped = [int(x) for x in np.asarray(metrics["dropped"])]
     if cfg.oracle_metrics:
         hist.estimator_sq_error = [float(x) for x in np.asarray(metrics["sq_error"])]
         hist.regret = RegretTracker.from_arrays(
@@ -252,6 +351,8 @@ def run_federated(
             metrics = {k: np.stack([m[k] for m in per_round]) for k in per_round[0]}
         else:
             metrics = {"train_loss": np.zeros(0), "cohort_size": np.zeros(0, np.int32)}
+            if not cfg.oracle_metrics:
+                metrics["dropped"] = np.zeros(0, np.int32)
             if cfg.oracle_metrics:
                 metrics.update(
                     sq_error=np.zeros(0),
@@ -263,5 +364,6 @@ def run_federated(
                 metrics["accuracy"] = np.zeros(0)
 
     hist = _materialize_history(metrics, cfg, has_eval=eval_data is not None)
+    hist.final_params = jax.tree_util.tree_map(np.asarray, params)
     hist.wall_time_s = time.time() - t0
     return hist

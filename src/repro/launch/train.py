@@ -7,7 +7,9 @@ code path with a 1-device mesh and (typically) --reduced configs, e.g.:
       --rounds 8 --clients 32 --budget 6 --sampler kvib --seq 64 --ckpt /tmp/fl
 
 The driver is the deployable realization of Algorithm 1:
-  host: sampler state, ISP draw, cohort padding, probabilities (K-Vib solver)
+  host: sampler state, ISP draw, cohort selection/padding via the shared
+        ``repro.fed.cohort`` contract (probabilities solved ONCE per round,
+        unbiased |S|/C overflow rescaling, inert zero padding)
   device: the jitted federated round step (local SGD + weighted aggregation
           + feedback norms in one program)
 """
@@ -24,6 +26,7 @@ from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
 from repro.core import estimator, make_sampler
 from repro.data import synthetic_tokens
+from repro.fed import cohort as fed_cohort
 from repro.fed.round import RoundSpec, build_round_step
 from repro.models import transformer
 
@@ -81,51 +84,41 @@ def main() -> None:
     spec = RoundSpec(cohort=args.cohort, local_steps=args.local_steps, local_lr=args.local_lr)
     round_step = jax.jit(build_round_step(cfg, spec), donate_argnums=(0,))
 
-    rng = np.random.default_rng(args.seed)
     dropped_total = 0
     for t in range(args.rounds):
         t0 = time.time()
         key, k_draw, k_data = jax.random.split(key, 3)
-        draw = sampler.sample(s_state, k_draw)
-        w_full = np.asarray(
-            estimator.client_weights(draw, jnp.asarray(lam), sampler.procedure, sampler.budget)
+        # Solve the sampling probabilities ONCE per round; the draw and the
+        # log line both reuse this vector (the old loop solved 3x: sample +
+        # two probabilities() calls in the print).
+        p = sampler.probabilities(s_state)
+        draw = sampler.sample_from(p, k_draw)
+        w_full = estimator.client_weights(
+            draw, jnp.asarray(lam), sampler.procedure, sampler.budget
         )
-        included = np.flatnonzero(w_full > 0)
-        if len(included) > args.cohort:
-            # overflow beyond the padded buffer: resample the cohort slots
-            # uniformly among included (logged; bias-free under the
-            # conditional-acceptance scheme of DESIGN.md section 6.1)
-            dropped_total += len(included) - args.cohort
-            included = rng.choice(included, size=args.cohort, replace=False)
-        cohort_ids = np.zeros(args.cohort, np.int64)
-        cohort_w = np.zeros(args.cohort, np.float32)
-        cohort_ids[: len(included)] = included
-        cohort_w[: len(included)] = w_full[included]
+        # Shared padded-cohort contract: uniform overflow drop with |S|/C
+        # weight rescaling (unbiased), inert zero padding — fed/cohort.py.
+        sel = fed_cohort.select_cohort(
+            draw.mask, w_full, args.cohort, jax.random.fold_in(k_draw, 1)
+        )
+        dropped_total += int(sel.n_dropped)
 
-        # gather cohort batches (C, R, B, S)
-        toks, tgts = [], []
-        for cid in cohort_ids:
-            kk = jax.random.fold_in(k_data, int(cid))
-            keys = jax.random.split(kk, args.local_steps)
-            tt = [ds.client_batch(int(cid), kr, args.local_batch) for kr in keys]
-            toks.append(jnp.stack([a for a, _ in tt]))
-            tgts.append(jnp.stack([b for _, b in tt]))
-        tokens = jnp.stack(toks)
-        targets = jnp.stack(tgts)
+        # gather cohort batches (C, R, B, S); padding slots stay zero
+        tokens, targets = fed_cohort.host_gather_cohort_batches(
+            ds, sel, k_data, args.local_steps, args.local_batch
+        )
 
-        params, norms, loss = round_step(params, tokens, targets, jnp.asarray(cohort_w))
+        params, norms, loss = round_step(params, tokens, targets, sel.weights)
 
-        # feedback: pi_t(i) = lambda_i ||g_i|| for the sampled clients
+        # feedback: pi_t(i) = lambda_i ||g_i|| for the clients actually trained
+        ids, valid = np.asarray(sel.ids), np.asarray(sel.valid)
         fb = np.zeros(args.clients, np.float32)
-        fb[cohort_ids[: len(included)]] = (
-            lam[cohort_ids[: len(included)]] * np.asarray(norms)[: len(included)]
-        )
+        fb[ids[valid]] = lam[ids[valid]] * np.asarray(norms)[valid]
         s_state = sampler.update(s_state, draw, jnp.asarray(fb))
 
         print(
-            f"round {t:>3} loss={float(loss):.4f} cohort={len(included)} "
-            f"p[min/max]={float(jnp.min(sampler.probabilities(s_state))):.3f}/"
-            f"{float(jnp.max(sampler.probabilities(s_state))):.3f} "
+            f"round {t:>3} loss={float(loss):.4f} cohort={int(valid.sum())} "
+            f"p[min/max]={float(jnp.min(p)):.3f}/{float(jnp.max(p)):.3f} "
             f"({time.time()-t0:.1f}s)"
         )
         if args.ckpt and args.ckpt_every and (t + 1) % args.ckpt_every == 0:

@@ -1,0 +1,147 @@
+"""The shared padded-cohort contract (fed/cohort.py): selection determinism,
+inert padding, and — the launcher bugfix — unbiasedness of the |S|/C
+overflow rescaling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import synthetic_classification
+from repro.fed import cohort
+
+
+def _mask(n, included):
+    m = np.zeros(n, bool)
+    m[list(included)] = True
+    return jnp.asarray(m)
+
+
+def test_no_overflow_keeps_all_included_with_exact_weights():
+    n, c = 16, 6
+    included = [1, 4, 9, 13]
+    w_full = jnp.where(_mask(n, included), jnp.linspace(0.5, 2.0, n), 0.0)
+    sel = cohort.select_cohort(_mask(n, included), w_full, c, jax.random.PRNGKey(0))
+    valid = np.asarray(sel.valid)
+    ids = np.asarray(sel.ids)
+    assert int(sel.n_included) == 4 and int(sel.n_dropped) == 0
+    assert valid.sum() == 4
+    assert sorted(ids[valid]) == included
+    # rescale is exactly 1.0: kept weights are bitwise the full-mask weights
+    np.testing.assert_array_equal(
+        np.asarray(sel.weights)[valid], np.asarray(w_full)[ids[valid]]
+    )
+    # padding slots are inert: zero weight, invalid, and point at excluded ids
+    assert (np.asarray(sel.weights)[~valid] == 0.0).all()
+    assert not set(ids[~valid]) & set(included)
+
+
+def test_overflow_drops_to_c_and_rescales_by_inverse_acceptance():
+    n, c = 16, 4
+    included = list(range(8))  # |S| = 8 > C = 4
+    w_full = jnp.where(_mask(n, included), jnp.linspace(0.5, 2.0, n), 0.0)
+    sel = cohort.select_cohort(_mask(n, included), w_full, c, jax.random.PRNGKey(3))
+    valid = np.asarray(sel.valid)
+    ids = np.asarray(sel.ids)
+    assert int(sel.n_included) == 8 and int(sel.n_dropped) == 4
+    assert valid.all()  # buffer saturated, every slot holds a kept client
+    assert set(ids) <= set(included)
+    # each retained weight is w_full[i] * |S|/C (inverse acceptance prob)
+    np.testing.assert_allclose(
+        np.asarray(sel.weights), np.asarray(w_full)[ids] * (8 / 4), rtol=1e-6
+    )
+
+
+def test_overflow_rescaling_is_unbiased():
+    """Satellite bugfix: E[scattered slot weight of client i] == w_full[i].
+    The pre-fix launcher kept the un-rescaled weights after dropping, which
+    would fail this at exactly a factor C/|S| = 0.5."""
+    n, c = 16, 4
+    included = list(range(8))
+    mask = _mask(n, included)
+    w_full = jnp.where(mask, jnp.linspace(0.5, 2.0, n), 0.0)
+
+    def scattered_weights(key):
+        sel = cohort.select_cohort(mask, w_full, c, key)
+        return jnp.zeros((n,)).at[sel.ids].add(jnp.where(sel.valid, sel.weights, 0.0))
+
+    trials = 4000
+    ws = jax.vmap(scattered_weights)(jax.random.split(jax.random.PRNGKey(7), trials))
+    mean = np.asarray(jnp.mean(ws, axis=0))
+    se = np.asarray(jnp.std(ws, axis=0)) / np.sqrt(trials)
+    np.testing.assert_array_less(np.abs(mean - np.asarray(w_full)), 5.0 * se + 1e-6)
+
+
+def test_overflow_selection_is_uniform_over_included():
+    """Acceptance must be uniform at C/|S| per included client, or the
+    rescaled estimator would be unbiased in total but skewed per client."""
+    n, c = 12, 3
+    included = list(range(6))
+    mask = _mask(n, included)
+    w_full = mask.astype(jnp.float32)
+
+    def kept(key):
+        sel = cohort.select_cohort(mask, w_full, c, key)
+        return jnp.zeros((n,)).at[sel.ids].add(sel.valid.astype(jnp.float32))
+
+    trials = 6000
+    freq = np.asarray(
+        jnp.mean(jax.vmap(kept)(jax.random.split(jax.random.PRNGKey(5), trials)), axis=0)
+    )
+    np.testing.assert_allclose(freq[included], c / len(included), atol=0.03)
+    assert (freq[6:] == 0).all()
+
+
+def test_scatter_cohort_padding_is_inert():
+    n, c = 10, 4
+    sel = cohort.CohortSelection(
+        ids=jnp.asarray([2, 7, 0, 1], jnp.int32),
+        weights=jnp.asarray([1.0, 2.0, 0.0, 0.0]),
+        valid=jnp.asarray([True, True, False, False]),
+        n_included=jnp.asarray(2, jnp.int32),
+        n_dropped=jnp.asarray(0, jnp.int32),
+    )
+    vals = {"a": jnp.arange(c * 3, dtype=jnp.float32).reshape(c, 3) + 1.0}
+    out = cohort.scatter_cohort(vals, sel, n)["a"]
+    np.testing.assert_array_equal(np.asarray(out[2]), np.asarray(vals["a"][0]))
+    np.testing.assert_array_equal(np.asarray(out[7]), np.asarray(vals["a"][1]))
+    # padding slots (pointing at clients 0 and 1) contribute nothing
+    rest = np.delete(np.asarray(out), [2, 7], axis=0)
+    assert (rest == 0).all()
+
+
+def test_weighted_delta_sum_matches_manual():
+    deltas = {"w": jnp.arange(12, dtype=jnp.float32).reshape(4, 3)}
+    w = jnp.asarray([0.5, 0.0, 2.0, 1.0])
+    out = cohort.weighted_delta_sum(deltas, w)["w"]
+    ref = sum(float(w[i]) * np.arange(12).reshape(4, 3)[i] for i in range(4))
+    np.testing.assert_allclose(np.asarray(out), ref)
+
+
+@pytest.mark.parametrize("n_valid", [0, 2, 4])
+def test_host_gather_fills_padding_with_zeros(n_valid):
+    ds = synthetic_classification(n_clients=8, total=400, seed=3)
+    c, r, b = 4, 2, 5
+    ids = np.asarray([3, 6, 1, 0], np.int32)
+    valid = np.asarray([i < n_valid for i in range(c)])
+    sel = cohort.CohortSelection(
+        ids=jnp.asarray(ids),
+        weights=jnp.where(jnp.asarray(valid), 1.0, 0.0),
+        valid=jnp.asarray(valid),
+        n_included=jnp.asarray(n_valid, jnp.int32),
+        n_dropped=jnp.asarray(0, jnp.int32),
+    )
+    k_data = jax.random.PRNGKey(11)
+    feats, labs = cohort.host_gather_cohort_batches(ds, sel, k_data, r, b)
+    assert feats.shape == (c, r, b) + tuple(ds.features.shape[2:])
+    assert labs.shape == (c, r, b) + tuple(ds.labels.shape[2:])
+    for slot in range(c):
+        if not valid[slot]:
+            assert (np.asarray(feats[slot]) == 0).all()
+            assert (np.asarray(labs[slot]) == 0).all()
+            continue
+        # valid slots reproduce the direct per-client gather exactly
+        keys = jax.random.split(jax.random.fold_in(k_data, int(ids[slot])), r)
+        for step, kr in enumerate(keys):
+            f, l = ds.client_batch(int(ids[slot]), kr, b)
+            np.testing.assert_array_equal(np.asarray(feats[slot, step]), np.asarray(f))
+            np.testing.assert_array_equal(np.asarray(labs[slot, step]), np.asarray(l))

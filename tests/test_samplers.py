@@ -9,6 +9,22 @@ from repro.core import estimator, samplers, solver
 ALL_SAMPLERS = ["uniform_isp", "uniform_rsp", "kvib", "vrb", "mabs", "avare", "optimal_isp"]
 
 
+def test_registry_complete_and_exported():
+    """Every registered sampler class is exported in __all__ (Osmd and
+    ClusteredKVib were registry-only), constructible via make_sampler, and
+    every exported Sampler subclass is reachable through the registry."""
+    registered = set()
+    for name, cls in samplers._REGISTRY.items():
+        assert cls.__name__ in samplers.__all__, f"{cls.__name__} missing from __all__"
+        s = samplers.make_sampler(name, n=10, budget=3)
+        assert isinstance(s, samplers.Sampler)
+        registered.add(cls)
+    for export in samplers.__all__:
+        obj = getattr(samplers, export)
+        if isinstance(obj, type) and issubclass(obj, samplers.Sampler) and obj is not samplers.Sampler:
+            assert obj in registered, f"{export} exported but not registered"
+
+
 @pytest.mark.parametrize("name", ALL_SAMPLERS)
 def test_roundtrip_and_constraints(name):
     n, k = 40, 8

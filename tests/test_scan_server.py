@@ -9,12 +9,14 @@ test, not an allclose one.
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import make_sampler
 from repro.data import synthetic_classification
 from repro.fed import FedConfig, logistic_regression, run_federated
+from repro.fed import server as fed_server
 
 
 @pytest.fixture(scope="module")
@@ -72,6 +74,76 @@ def test_scan_eval_schedule_matches_python(tiny_ds):
     # rounds=5, eval_every=5 -> evals at t=0 and t=4
     assert len(h_scan.test_accuracy) == 2
     assert h_scan.test_accuracy == h_py.test_accuracy
+
+
+@pytest.mark.parametrize("name", ["kvib", "uniform_isp", "uniform_rsp"])
+def test_deployable_cohort_matches_oracle_path_bitwise(tiny_ds, name):
+    """With C = N the draw can never overflow (|S| <= C always), so the
+    cohort-only deployable path must reproduce the oracle full-mask path's
+    draws AND parameter trajectory bit-for-bit: the selection keeps exactly
+    S with unrescaled weights, and the scattered-zero aggregation performs
+    the identical reduction."""
+    cfg = FedConfig(rounds=5, budget=4, local_steps=2, batch_size=16, local_lr=0.05, seed=11)
+    sampler = make_sampler(
+        name, n=tiny_ds.n_clients, budget=cfg.budget,
+        **({"horizon": cfg.rounds} if name == "kvib" else {}),
+    )
+    task = logistic_regression()
+    h_oracle = run_federated(task, tiny_ds, sampler, cfg)
+    h_dep = run_federated(
+        task, tiny_ds, sampler,
+        dataclasses.replace(cfg, oracle_metrics=False, cohort=tiny_ds.n_clients),
+    )
+    # identical draws every round => identical sampler-state trajectory
+    assert h_dep.cohort_size == h_oracle.cohort_size
+    # identical parameter trajectory, observed at the endpoint
+    for a, b in zip(
+        jax.tree_util.tree_leaves(h_dep.final_params),
+        jax.tree_util.tree_leaves(h_oracle.final_params),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_deployable_cohort_scan_matches_python_loop(tiny_ds):
+    """The deployable cohort body is scan-safe: compiled and per-round
+    dispatch agree bit-for-bit, including when overflow rescaling fires
+    (C below the expected draw size)."""
+    h_scan, h_py = _run_pair(tiny_ds, "kvib", oracle_metrics=False, cohort=4)
+    assert h_scan.train_loss == h_py.train_loss
+    assert h_scan.cohort_size == h_py.cohort_size
+    assert h_scan.cohort_dropped == h_py.cohort_dropped
+    # the C-slot buffer bounds the contacted cohort; drops are surfaced
+    assert all(c <= 4 for c in h_scan.cohort_size)
+    assert len(h_scan.cohort_dropped) == len(h_scan.cohort_size)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(h_scan.final_params),
+        jax.tree_util.tree_leaves(h_py.final_params),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_deployable_traces_only_cohort_local_updates(tiny_ds):
+    """O(N) -> O(C): the deployable round body's jaxpr must not contain the
+    all-clients (N, R, B, dim) batch buffer — only the (C, R, B, dim) one.
+    The oracle body keeps the full buffer (its diagnostics need it)."""
+    n, c, r, b, dim = tiny_ds.n_clients, 5, 2, 16, tiny_ds.features.shape[-1]
+    task = logistic_regression()
+    sampler = make_sampler("kvib", n=n, budget=4, horizon=5)
+
+    def jaxpr_of(cfg):
+        body = fed_server._build_round_body(task, tiny_ds, sampler, cfg, None)
+        params = task.init(jax.random.PRNGKey(0))
+        carry = (params, cfg.server_opt.init(params), sampler.init())
+        xs = (jnp.zeros((), jnp.int32), jax.random.PRNGKey(1), jax.random.PRNGKey(2))
+        return str(jax.make_jaxpr(body)(carry, xs))
+
+    full_shape = f"f32[{n},{r},{b},{dim}]"
+    cohort_shape = f"f32[{c},{r},{b},{dim}]"
+    base = FedConfig(rounds=5, budget=4, local_steps=r, batch_size=b)
+    oracle = jaxpr_of(base)
+    dep = jaxpr_of(dataclasses.replace(base, oracle_metrics=False, cohort=c))
+    assert full_shape in oracle and cohort_shape not in oracle
+    assert cohort_shape in dep and full_shape not in dep
 
 
 def test_rsp_regret_marginals_are_valid(tiny_ds):
