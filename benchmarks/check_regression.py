@@ -1,0 +1,89 @@
+"""Benchmark regression gate over the committed ``results/BENCH_*.json``.
+
+Every benchmark that emits a JSON artifact records a ``ratios`` dict of
+dimensionless, LOWER-IS-BETTER cost ratios (e.g. deployable/oracle time, or
+the N=1024/N=64 flatness of the cohort-width round).  Ratios — not absolute
+microseconds — are what survive a machine change, so they are what the gate
+compares: this module re-runs each such benchmark into a temporary results
+dir and fails if any ratio regressed by more than ``factor`` (default 2x)
+against the committed baseline.
+
+Wired as a ``slow``-marked test (tests/test_bench_regression.py), so CI can
+opt in via ``pytest -m slow`` without taxing tier-1:
+
+  PYTHONPATH=src python -m benchmarks.check_regression [--factor 2.0]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+import tempfile
+
+DEFAULT_FACTOR = 2.0
+
+
+def iter_baselines(results_dir: str = "results"):
+    """Yield (bench_name, ratios) for every committed baseline with ratios."""
+    for path in sorted(glob.glob(os.path.join(results_dir, "BENCH_*.json"))):
+        with open(path) as f:
+            data = json.load(f)
+        if data.get("ratios"):
+            yield data["bench"], data["ratios"]
+
+
+def check_all(results_dir: str = "results", factor: float = DEFAULT_FACTOR) -> list[str]:
+    """Re-run every ratio-bearing benchmark and compare against its baseline.
+
+    Returns a list of human-readable failure strings (empty == all within
+    budget).  The re-run writes to a temp dir, so the committed baselines are
+    never touched — refreshing them is an explicit ``python -m benchmarks.run``.
+    """
+    import benchmarks.run as bench_run
+
+    baselines = list(iter_baselines(results_dir))
+    if not baselines:
+        raise FileNotFoundError(
+            f"no BENCH_*.json baselines with a 'ratios' dict under {results_dir!r}"
+        )
+    failures = []
+    old_results = bench_run.RESULTS
+    with tempfile.TemporaryDirectory() as tmp:
+        bench_run.RESULTS = tmp
+        try:
+            for name, base_ratios in baselines:
+                bench_run.BENCHES[name]()
+                with open(os.path.join(tmp, f"BENCH_{name}.json")) as f:
+                    fresh = json.load(f)
+                for key, base in base_ratios.items():
+                    new = fresh["ratios"].get(key)
+                    if new is None:
+                        failures.append(f"{name}:{key} missing from re-run output")
+                    elif new > factor * base:
+                        failures.append(
+                            f"{name}:{key} regressed {base:.4f} -> {new:.4f} "
+                            f"(> {factor:g}x budget)"
+                        )
+        finally:
+            bench_run.RESULTS = old_results
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default=os.environ.get("REPRO_RESULTS", "results"))
+    ap.add_argument("--factor", type=float, default=DEFAULT_FACTOR)
+    args = ap.parse_args()
+    failures = check_all(args.results, args.factor)
+    if failures:
+        print("BENCH REGRESSIONS:")
+        for f in failures:
+            print(" ", f)
+        sys.exit(1)
+    print("all benchmark ratios within budget")
+
+
+if __name__ == "__main__":
+    main()

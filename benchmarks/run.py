@@ -9,6 +9,7 @@ benches time the hot paths on this host.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -200,7 +201,91 @@ def bench_fed_round_cohort() -> None:
         )
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, "BENCH_fed_round_cohort.json"), "w") as f:
-        json.dump({"bench": "fed_round_cohort", "entries": entries}, f, indent=2)
+        json.dump(
+            {
+                "bench": "fed_round_cohort",
+                "entries": entries,
+                # regression-gate ratios: LOWER is better (benchmarks/check_regression.py)
+                "ratios": {
+                    "deployable_over_oracle_n1024":
+                        entries[-1]["deployable_us"] / entries[-1]["oracle_us"],
+                },
+            },
+            f, indent=2,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Table: cohort-width deployable round — us/round and live bytes flat in N
+# ---------------------------------------------------------------------------
+
+
+def bench_fed_cohort_width() -> None:
+    """The tentpole claim of the cohort-width fast path: at fixed K/C the
+    deployable round's cost must NOT grow with the client population N.
+
+    Times the deployable round body in both aggregation widths — the default
+    O(C*D) cohort-width path and the legacy O(N*D) scatter path
+    (``exact_oracle_equiv=True``) — across N, and records the compiled
+    round's peak live bytes.  Emits ``RESULTS/BENCH_fed_cohort_width.json``
+    with lower-is-better flatness ratios for the regression gate.
+
+    Design notes: the task is the MLP (D ~ 26k params) so the O(*D) costs
+    dominate the O(N) sampler-vector ops, as they do at real scale; client
+    sizes are uniform (``power=0.0``) so the padded dataset's max-client size
+    stays constant in N — under the default power law s_max grows with N and
+    the batch *gather* walks a multi-GB array, a simulation-harness artifact
+    that would otherwise be billed to the round."""
+    from repro.core import make_sampler
+    from repro.data import synthetic_classification
+    from repro.fed import FedConfig, mlp_classifier
+    from repro.fed import server as fed_server
+
+    k, c = 10, 20
+    task = mlp_classifier(dim=60, n_classes=10, hidden=128, depth=2)
+    entries = []
+    for n in (64, 256, 1024):
+        ds = synthetic_classification(n_clients=n, total=40 * n, power=0.0, seed=0)
+        sampler = make_sampler("kvib", n=n, budget=k, horizon=100)
+        params = task.init(jax.random.PRNGKey(0))
+        xs = (jnp.zeros((), jnp.int32), jax.random.PRNGKey(1), jax.random.PRNGKey(2))
+        base = FedConfig(budget=k, local_steps=1, batch_size=16,
+                         oracle_metrics=False, cohort=c)
+        entry = {"n": n, "budget": k, "cohort": c}
+        for mode, cfg in (
+            ("cohort_width", base),
+            ("scatter", dataclasses.replace(base, exact_oracle_equiv=True)),
+        ):
+            body = fed_server._build_round_body(task, ds, sampler, cfg, None)
+            carry = (params, cfg.server_opt.init(params), sampler.init())
+            jitted = jax.jit(body)  # one wrapper: _timeit and memory_analysis share the compile
+            entry[f"{mode}_us"] = _timeit(jitted, carry, xs, reps=20, warmup=3)
+            row(f"fed_cohort_width_n{n}_{mode}", entry[f"{mode}_us"],
+                f"K={k} C={c} deployable round body")
+            try:
+                ma = jitted.lower(carry, xs).compile().memory_analysis()
+                entry[f"{mode}_peak_bytes"] = int(
+                    ma.argument_size_in_bytes + ma.output_size_in_bytes
+                    + ma.temp_size_in_bytes
+                )
+            except Exception:
+                entry[f"{mode}_peak_bytes"] = None
+        entries.append(entry)
+    flat = entries[-1]["cohort_width_us"] / entries[0]["cohort_width_us"]
+    slope = entries[-1]["scatter_us"] / entries[0]["scatter_us"]
+    row("fed_cohort_width_flatness", 0,
+        f"cohort-width N=64->1024: {flat:.2f}x (scatter path: {slope:.2f}x)")
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "BENCH_fed_cohort_width.json"), "w") as f:
+        json.dump(
+            {
+                "bench": "fed_cohort_width",
+                "entries": entries,
+                # regression-gate ratios: LOWER is better
+                "ratios": {"cohort_width_n1024_over_n64": flat},
+            },
+            f, indent=2,
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -296,6 +381,7 @@ BENCHES = {
     "round_step": bench_round_step,
     "fed_round_scan": bench_fed_round_scan,
     "fed_round_cohort": bench_fed_round_cohort,
+    "fed_cohort_width": bench_fed_cohort_width,
     "fig2": table_synthetic,
     "fig3b": table_budget,
     "fig4": table_femnist,

@@ -7,6 +7,7 @@ Public API:
   regret      — dynamic/static regret trackers (eqs. 8-9)
 """
 from repro.core import estimator, regret, samplers, solver
+from repro.core.estimator import aggregate_and_error, aggregate_and_error_cohort
 from repro.core.samplers import (
     Avare,
     ClusteredKVib,
@@ -29,6 +30,8 @@ __all__ = [
     "regret",
     "samplers",
     "solver",
+    "aggregate_and_error",
+    "aggregate_and_error_cohort",
     "Avare",
     "ClusteredKVib",
     "KVib",

@@ -27,6 +27,7 @@ __all__ = [
     "aggregate_stacked",
     "full_aggregate_stacked",
     "aggregate_and_error",
+    "aggregate_and_error_cohort",
     "isp_variance",
     "rsp_variance_bound",
     "empirical_sq_error",
@@ -119,12 +120,51 @@ def aggregate_and_error(updates, weights: jax.Array, lam: jax.Array):
     if jax.default_backend() == "tpu" and d_dim % 128 == 0:
         from repro.kernels.fused_weighted_agg import fused_multi_weighted_agg
 
-        bd = d_dim if d_dim <= 2048 else max(
-            b for b in (2048, 1024, 512, 256, 128) if d_dim % b == 0
-        )
-        out = fused_multi_weighted_agg(flat, w2, block_d=bd)
+        out = fused_multi_weighted_agg(flat, w2, block_d=_block_d(d_dim))
     else:
         out = w2 @ flat
+    return _unflatten_vector(out[0], spec), jnp.sum(out[1] ** 2)
+
+
+def _block_d(d_dim: int) -> int:
+    return d_dim if d_dim <= 2048 else max(
+        b for b in (2048, 1024, 512, 256, 128) if d_dim % b == 0
+    )
+
+
+def aggregate_and_error_cohort(updates, weights: jax.Array, lam_cohort: jax.Array):
+    """Cohort-width ``aggregate_and_error``: (C, ...) stacked cohort deltas in,
+    no (N, D) materialization anywhere.
+
+    ``updates`` carries a leading *cohort-slot* axis C (not the client axis N);
+    ``weights`` is ``sel.weights`` from ``fed.cohort.select_cohort`` (zero on
+    padding) and ``lam_cohort`` is lambda gathered at ``sel.ids`` and zeroed on
+    padding.  The returned estimate equals the scatter-to-N path's estimate in
+    exact arithmetic — the off-cohort rows it sums are identically zero — but
+    only to float tolerance on hardware (the reduction runs over C terms
+    instead of N, so partial-sum order differs; see fed/cohort.py
+    "Aggregation width").  The squared error is the cohort-supported error
+    ``|| sum_c (w_c - lam_c) delta_c ||^2``, which is what the scatter path's
+    diagnostic row also computes when the off-cohort deltas are zero.
+
+    Returns (estimate pytree, scalar squared error).
+    """
+    flat, spec = _flatten_stacked(updates)
+    d_dim = flat.shape[1]
+    if jax.default_backend() == "tpu" and d_dim % 128 == 0:
+        from repro.kernels.fused_weighted_agg import fused_cohort_agg_and_error
+
+        d_vec, sq = fused_cohort_agg_and_error(
+            flat, weights, lam_cohort, block_d=_block_d(d_dim)
+        )
+        return _unflatten_vector(d_vec, spec), sq
+    w2 = jnp.stack(
+        [
+            weights.astype(jnp.float32),
+            weights.astype(jnp.float32) - lam_cohort.astype(jnp.float32),
+        ]
+    )
+    out = w2 @ flat
     return _unflatten_vector(out[0], spec), jnp.sum(out[1] ** 2)
 
 

@@ -59,13 +59,15 @@ class RegretTracker:
         budget: int,
         costs,
         opt_costs,
-        score_history,
+        score_history=None,
     ) -> "RegretTracker":
         """Post-hoc view over stacked on-device buffers (T,), (T,), (T, N)
-        produced inside the compiled scan loop."""
+        produced inside the compiled scan loop.  ``score_history=None``
+        (FedConfig.track_scores=False) yields an empty history — the regret
+        curves still work, only score-replay diagnostics are unavailable."""
         costs = np.asarray(costs)
         opt_costs = np.asarray(opt_costs)
-        score_history = np.asarray(score_history)
+        score_history = np.zeros((0, 0)) if score_history is None else np.asarray(score_history)
         return cls(
             budget=budget,
             costs=[float(c) for c in costs],
@@ -82,7 +84,15 @@ class RegretTracker:
         return np.cumsum(c - o)
 
     def static_regret(self) -> float:
-        """eq. (9) first term: vs the best fixed p in hindsight."""
+        """eq. (9) first term: vs the best fixed p in hindsight.
+
+        Needs the per-round score history; unavailable when the run opted out
+        via ``FedConfig.track_scores=False``."""
+        if not self.score_history:
+            raise ValueError(
+                "static_regret needs score_history; this run recorded none "
+                "(FedConfig.track_scores=False or no rounds)"
+            )
         hist = np.stack(self.score_history)  # (T, N)
         cum_sq = np.sqrt(np.sum(hist**2, axis=0))  # sqrt(pi^2_{1:T}(i))
         p_star = np.asarray(solver.isp_probabilities(jnp.asarray(cum_sq), self.budget))

@@ -1,5 +1,6 @@
 from repro.fed.client import local_update, update_norm
 from repro.fed.cohort import CohortSelection, select_cohort
+from repro.fed.round import RoundSpec, build_fed_scan, build_round_step
 from repro.fed.server import FedConfig, History, run_federated
 from repro.fed.tasks import Task, logistic_regression, mlp_classifier, tiny_lm
 
@@ -8,6 +9,9 @@ __all__ = [
     "update_norm",
     "CohortSelection",
     "select_cohort",
+    "RoundSpec",
+    "build_fed_scan",
+    "build_round_step",
     "FedConfig",
     "History",
     "run_federated",

@@ -41,15 +41,42 @@ server genuinely did not contact them), which the bandit samplers treat as
 an observed zero — the same partial-feedback semantics as any unsampled
 client.
 
+Aggregation width
+-----------------
+Two aggregation consumers of a selection, with different width/equivalence
+trade-offs:
+
+* **C-width (the deployable default)** — reduce directly over the (C, ...)
+  stacked cohort deltas: ``weighted_delta_sum(deltas_c, sel.weights)``, or
+  ``estimator.aggregate_and_error_cohort`` when the squared-error diagnostic
+  should ride along.  O(C*D) compute and memory; nothing (N, D)-shaped ever
+  exists (tests assert this on the round body's jaxpr).  Because the
+  reduction runs over C terms instead of N, partial-sum order differs from
+  the full-mask contraction: the result equals the N-width one in *exact*
+  arithmetic but only to float tolerance on hardware (allclose, not
+  bitwise).
+* **N-width scatter (``FedConfig.exact_oracle_equiv=True``)** —
+  ``scatter_cohort`` the deltas/weights back to (N, ...) zero-padded buffers
+  and reuse the oracle path's contraction.  Inserted zero terms cannot change
+  the reduction's partial sums, so when ``|S| <= C`` the round is **bitwise**
+  identical to the full-mask round — the property the cross-mode equality
+  tests pin down — at O(N*D) memory cost.
+
+Everything else in the round is width-honest either way: sampler feedback and
+state are legitimately (N,)-vectors (scatters of (C,) values), train-loss is
+a (C,)-reduction.
+
 Determinism
 -----------
 When ``|S| <= C`` the selection keeps *all* of ``S`` with weights bitwise
 equal to the full-mask weights (rescale is exactly 1.0), so a cohort-only
-round reproduces the full-mask round bit-for-bit (tests/test_scan_server.py).
+round under the N-width scatter reproduces the full-mask round bit-for-bit,
+and under C-width aggregation to float tolerance (tests/test_scan_server.py).
 All functions are shape-static and trace-safe (usable inside ``lax.scan``).
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -134,6 +161,15 @@ def weighted_delta_sum(deltas, w: jax.Array):
     return jax.tree_util.tree_map(one, deltas)
 
 
+@functools.lru_cache(maxsize=32)
+def _zero_block(shape: tuple, dtype_name: str) -> np.ndarray:
+    """Shared all-zero padding buffer, allocated once per (shape, dtype) for
+    the process lifetime.  Callers treat it as read-only (every consumer
+    copies on ``np.stack``), so one buffer serves every round and every
+    padding slot — the pre-hoist code re-allocated both buffers each call."""
+    return np.zeros(shape, np.dtype(dtype_name))
+
+
 def host_gather_cohort_batches(
     dataset, sel: CohortSelection, k_data: jax.Array, local_steps: int, batch_size: int
 ):
@@ -146,13 +182,13 @@ def host_gather_cohort_batches(
     """
     ids = np.asarray(sel.ids)
     valid = np.asarray(sel.valid)
-    zero_feat = np.zeros(
+    zero_feat = _zero_block(
         (local_steps, batch_size) + tuple(dataset.features.shape[2:]),
-        jnp.asarray(dataset.features).dtype,
+        str(dataset.features.dtype),
     )
-    zero_lab = np.zeros(
+    zero_lab = _zero_block(
         (local_steps, batch_size) + tuple(dataset.labels.shape[2:]),
-        jnp.asarray(dataset.labels).dtype,
+        str(dataset.labels.dtype),
     )
     feats, labs = [], []
     for slot in range(len(ids)):

@@ -26,16 +26,17 @@ the launcher); this module is the device-side consumer of that contract.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.fed.cohort import weighted_delta_sum
+from repro.fed.cohort import select_cohort, weighted_delta_sum
 from repro.models import transformer
 from repro.models.common import ArchConfig
 
-__all__ = ["RoundSpec", "build_round_step"]
+__all__ = ["RoundSpec", "build_round_step", "build_fed_scan"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +45,7 @@ class RoundSpec:
     local_steps: int  # R
     local_lr: float = 0.02
     server_lr: float = 1.0
+    local_batch: int = 2  # B_local (used by the compiled scan's device gather)
 
 
 def _tree_sq_norm(delta):
@@ -152,3 +154,118 @@ def build_round_step(cfg: ArchConfig, spec: RoundSpec, constrain=None) -> Callab
         return round_step
 
     raise ValueError(f"unknown round_mode {mode!r}")
+
+
+def build_fed_scan(
+    cfg: ArchConfig,
+    spec: RoundSpec,
+    sampler,
+    dataset,
+    *,
+    mesh=None,
+    constrain=None,
+) -> Callable:
+    """Compiled multi-round federated training: ONE jitted ``lax.scan`` whose
+    per-round body is this module's pod-scale ``build_round_step`` — the
+    mesh-parallel counterpart of the single-host scan loop in ``fed/server.py``
+    and the compiled form of the ``repro.launch.train`` host loop.
+
+    Per round, entirely inside the trace: probabilities solved once, ISP/RSP
+    draw, padded-cohort selection (shared ``fed.cohort`` contract, unbiased
+    |S|/C overflow rescaling), device-side cohort batch gather (keys derived
+    by ``fold_in(k_data, client_id)`` — the identical stream to
+    ``host_gather_cohort_batches``, so the compiled and host loops train on
+    the same batches), the round step's local training + cohort-width
+    aggregation, feedback scatter, sampler update.  Every buffer with a
+    parameter axis is C-wide; the sampler state and feedback are the only
+    N-sized tensors, and they are (N,)-vectors.
+
+    With ``mesh`` (from ``repro.launch.mesh``), cohort batches carry sharding
+    constraints: client_parallel spreads the C cohort members across the
+    mesh's batch axes, cohort_sequential spreads each member's local batch —
+    one dispatch drives the whole sharded multi-round run.
+
+    Returns ``run(params, s_state, round_keys)`` with ``round_keys`` (T, 2, 2)
+    stacked (k_draw, k_data) pairs; yields (params, s_state, metrics) where
+    metrics are (T,)-stacked ``loss`` / ``cohort_size`` / ``dropped``.
+    """
+    from repro.core import estimator
+
+    lam = dataset.lam
+    n = dataset.n_clients
+    round_step = build_round_step(cfg, spec, constrain)
+
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        from repro.launch.mesh import batch_axes
+
+        baxes = batch_axes(mesh)
+        # (C, R, B, S) batches: client_parallel shards cohort members,
+        # cohort_sequential scans members and shards their local batch.
+        spec_nd = (
+            PartitionSpec(baxes)
+            if cfg.round_mode == "client_parallel"
+            else PartitionSpec(None, None, baxes)
+        )
+
+        def shard_batches(x):
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec_nd))
+
+    else:
+
+        def shard_batches(x):
+            return x
+
+    def gather_cohort(sel, k_data):
+        """(C, R, B, ...) device gather; padding slots zeroed (inert)."""
+
+        def one(cid):
+            keys = jax.random.split(
+                jax.random.fold_in(k_data, cid), spec.local_steps
+            )
+            return jax.vmap(
+                lambda kr: dataset.client_batch(cid, kr, spec.local_batch)
+            )(keys)
+
+        feats, labs = jax.vmap(one)(sel.ids)
+
+        def zero_pad(leaf):
+            keep = sel.valid.reshape((-1,) + (1,) * (leaf.ndim - 1))
+            return jnp.where(keep, leaf, jnp.zeros((), leaf.dtype))
+
+        return shard_batches(zero_pad(feats)), shard_batches(zero_pad(labs))
+
+    def body(carry, keys_t):
+        params, s_state = carry
+        k_draw, k_data = keys_t[0], keys_t[1]
+        p = sampler.probabilities(s_state)
+        draw = sampler.sample_from(p, k_draw)
+        w_full = estimator.client_weights(draw, lam, sampler.procedure, sampler.budget)
+        sel = select_cohort(
+            draw.mask, w_full, spec.cohort, jax.random.fold_in(k_draw, 1)
+        )
+        tokens, targets = gather_cohort(sel, k_data)
+        params, norms, loss = round_step(params, tokens, targets, sel.weights)
+        # Sampler feedback: (N,)-vector scatter of the (C,) cohort norms.
+        fb = jnp.zeros((n,), jnp.float32).at[sel.ids].add(
+            jnp.where(sel.valid, lam[sel.ids] * norms, 0.0)
+        )
+        s_state = sampler.update(s_state, draw, fb)
+        metrics = {
+            "loss": loss,
+            "cohort_size": jnp.sum(sel.valid.astype(jnp.int32)),
+            "dropped": sel.n_dropped,
+        }
+        return (params, s_state), metrics
+
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+
+    @functools.partial(jax.jit, donate_argnums=donate)
+    def run(params, s_state, round_keys):
+        (params, s_state), metrics = jax.lax.scan(
+            body, (params, s_state), round_keys
+        )
+        return params, s_state, metrics
+
+    return run

@@ -29,13 +29,18 @@ Two metric fidelities:
   traced body via ``fed.cohort.select_cohort`` — local-update compute is
   O(C) per round instead of O(N), which is the whole point of expected-K
   client sampling.  Overflow (``|S| > C``) drops to a uniform size-C subset
-  with weights rescaled by ``|S|/C`` so the estimate stays unbiased; when
-  ``|S| <= C`` the round is bit-identical to the full-mask computation
-  (tests/test_scan_server.py).  Diagnostics requiring full feedback are
-  skipped; ``train_loss`` is the importance-weighted cohort estimate of the
-  full weighted loss (unbiased, but noisier than the oracle's exact value),
-  ``cohort_size`` counts the clients actually contacted (post-drop), and
-  ``History.cohort_dropped`` records the per-round overflow drops.
+  with weights rescaled by ``|S|/C`` so the estimate stays unbiased.
+  Aggregation is C-width by default (``estimator.aggregate_and_error_cohort``
+  — O(C*D), no (N, D) buffer exists anywhere in the round body), which
+  matches the oracle computation to float tolerance; setting
+  ``FedConfig.exact_oracle_equiv=True`` restores the (N, D) scatter path,
+  bit-identical to the full-mask computation whenever ``|S| <= C``
+  (tests/test_scan_server.py; fed/cohort.py "Aggregation width").
+  Diagnostics requiring full feedback are skipped; ``train_loss`` is the
+  importance-weighted cohort estimate of the full weighted loss (unbiased,
+  but noisier than the oracle's exact value), ``cohort_size`` counts the
+  clients actually contacted (post-drop), and ``History.cohort_dropped``
+  records the per-round overflow drops.
 
 The pod-scale distributed round lives in ``repro.fed.round`` and
 ``repro.launch`` — this module is the algorithmic reference loop and is what
@@ -77,6 +82,17 @@ class FedConfig:
     # Deployable-mode (oracle_metrics=False) static cohort buffer size C;
     # None -> min(2 * budget, n_clients).  Ignored in oracle mode.
     cohort: int | None = None
+    # Deployable-mode aggregation width.  False (default): aggregate directly
+    # over the (C, ...) cohort deltas — O(C*D) per round, no (N, D) buffer,
+    # allclose to the oracle path (the reduction order differs).  True:
+    # scatter the cohort back to (N, ...) buffers and reuse the oracle
+    # contraction — bitwise equal to the oracle path when |S| <= C, at O(N*D)
+    # memory cost.  Ignored in oracle mode.
+    exact_oracle_equiv: bool = False
+    # Oracle-mode (T, N) per-round score history buffer for the regret
+    # diagnostics.  Pure diagnostic weight at large T*N; turn off to drop it
+    # from the on-device metrics (regret costs are still tracked).
+    track_scores: bool = True
 
     def cohort_slots(self, n_clients: int) -> int:
         c = 2 * self.budget if self.cohort is None else int(self.cohort)
@@ -178,11 +194,11 @@ def _build_round_body(task: Task, dataset, sampler: samplers.Sampler, cfg: FedCo
     identically under ``lax.scan`` and under per-round ``jit`` dispatch.
 
     Oracle mode trains all N clients; deployable mode (oracle_metrics=False)
-    trains only the C-slot cohort selected from the draw (module docstring).
-    The deployable path scatters the cohort deltas/weights back to N-indexed
-    buffers and reuses the oracle path's exact aggregation contraction, so
-    when ``|S| <= C`` both modes produce bit-identical params and sampler
-    state (inserted zero terms cannot change the reduction's partial sums)."""
+    trains only the C-slot cohort selected from the draw and aggregates at
+    cohort width — O(C*D) with no (N, D) buffer — unless
+    ``cfg.exact_oracle_equiv`` asks for the legacy N-width scatter, which
+    reuses the oracle contraction and is bit-identical to it when
+    ``|S| <= C`` (module docstring; fed/cohort.py "Aggregation width")."""
 
     lam = dataset.lam
     n = dataset.n_clients
@@ -204,20 +220,21 @@ def _build_round_body(task: Task, dataset, sampler: samplers.Sampler, cfg: FedCo
 
         if cfg.oracle_metrics:
             deltas, losses, feedback_full = all_clients(params, k_data)
-            agg_weights = weights
             feedback = feedback_full * draw.mask
             train_loss = jnp.sum(lam * losses)
             cohort_size = draw.size
+            # sq_err shares the one pass over the stacked (N, ...) deltas.
+            d_est, sq_err = estimator.aggregate_and_error(deltas, weights, lam)
         else:
             # Deployable: select C slots from the draw (fold_in keeps the
-            # draw's key stream untouched), train only those clients, and
-            # scatter back to N-indexed buffers for the shared aggregation.
+            # draw's key stream untouched) and train only those clients.
             sel = fed_cohort.select_cohort(
                 draw.mask, weights, c_slots, jax.random.fold_in(k_sample, 1)
             )
             deltas_c, losses_c, norms_c = cohort_clients(params, k_data, sel.ids)
-            deltas = fed_cohort.scatter_cohort(deltas_c, sel, n)
-            agg_weights = fed_cohort.scatter_cohort(sel.weights, sel, n)
+            # Sampler feedback is an (N,)-vector scatter of a (C,) vector —
+            # the sampler state is legitimately N-sized; only the (N, D)
+            # delta pytree scatter is the scale problem.
             feedback = fed_cohort.scatter_cohort(
                 jnp.where(sel.valid, lam[sel.ids] * norms_c, 0.0), sel, n
             )
@@ -225,11 +242,25 @@ def _build_round_body(task: Task, dataset, sampler: samplers.Sampler, cfg: FedCo
             train_loss = jnp.sum(jnp.where(sel.valid, sel.weights * losses_c, 0.0))
             # The clients actually contacted (post-overflow-drop), not |S|.
             cohort_size = jnp.sum(sel.valid.astype(jnp.int32))
-
-        # sq_err is only meaningful in oracle mode (deployable deltas are
-        # zero off-cohort); the shared call keeps the d_est reduction
-        # bit-identical across modes and the dead row is fused away.
-        d_est, sq_err = estimator.aggregate_and_error(deltas, agg_weights, lam)
+            if cfg.exact_oracle_equiv:
+                # Scatter back to (N, ...) buffers and reuse the oracle
+                # contraction: bitwise equal to the oracle path when |S| <= C
+                # (inserted zero terms cannot change the partial sums), at
+                # O(N*D) memory cost.
+                deltas = fed_cohort.scatter_cohort(deltas_c, sel, n)
+                agg_weights = fed_cohort.scatter_cohort(sel.weights, sel, n)
+                d_est, sq_err = estimator.aggregate_and_error(deltas, agg_weights, lam)
+            else:
+                # Cohort-width aggregation: O(C*D), no (N, D) buffer exists
+                # anywhere in the round (tests assert this on the jaxpr).
+                # Same value as the scatter path in exact arithmetic; allclose
+                # on hardware (fed/cohort.py "Aggregation width").
+                lam_c = jnp.where(sel.valid, lam[sel.ids], 0.0)
+                d_est, sq_err = estimator.aggregate_and_error_cohort(
+                    deltas_c, sel.weights, lam_c
+                )
+        # sq_err is recorded only in oracle mode; the deployable branches'
+        # error row is dead code and fused away.
         params, opt_state = cfg.server_opt.apply(params, d_est, opt_state)
 
         # The server only observes sampled feedback (Theorem 5.2's partial
@@ -251,9 +282,11 @@ def _build_round_body(task: Task, dataset, sampler: samplers.Sampler, cfg: FedCo
                 # cannot corrupt the regret/quality-gap diagnostics.
                 p_eff = jnp.clip(sampler.budget * draw.draw_probs, 1e-30, 1.0)
             cost, opt_cost = regret.round_costs(feedback_full, p_eff, sampler.budget)
-            metrics.update(
-                sq_error=sq_err, cost=cost, opt_cost=opt_cost, scores=feedback_full
-            )
+            metrics.update(sq_error=sq_err, cost=cost, opt_cost=opt_cost)
+            if cfg.track_scores:
+                # (T, N) stacked across the scan — pure diagnostic weight at
+                # large T*N; opt out via FedConfig.track_scores=False.
+                metrics["scores"] = feedback_full
         if eval_data is not None:
             do_eval = (t % cfg.eval_every == 0) | (t == cfg.rounds - 1)
             metrics["accuracy"] = jax.lax.cond(
@@ -279,7 +312,7 @@ def _materialize_history(metrics: dict, cfg: FedConfig, has_eval: bool) -> Histo
     if cfg.oracle_metrics:
         hist.estimator_sq_error = [float(x) for x in np.asarray(metrics["sq_error"])]
         hist.regret = RegretTracker.from_arrays(
-            cfg.budget, metrics["cost"], metrics["opt_cost"], metrics["scores"]
+            cfg.budget, metrics["cost"], metrics["opt_cost"], metrics.get("scores")
         )
     if has_eval:
         acc = np.asarray(metrics["accuracy"])
@@ -355,11 +388,10 @@ def run_federated(
                 metrics["dropped"] = np.zeros(0, np.int32)
             if cfg.oracle_metrics:
                 metrics.update(
-                    sq_error=np.zeros(0),
-                    cost=np.zeros(0),
-                    opt_cost=np.zeros(0),
-                    scores=np.zeros((0, dataset.n_clients)),
+                    sq_error=np.zeros(0), cost=np.zeros(0), opt_cost=np.zeros(0)
                 )
+                if cfg.track_scores:
+                    metrics["scores"] = np.zeros((0, dataset.n_clients))
             if eval_data is not None:
                 metrics["accuracy"] = np.zeros(0)
 

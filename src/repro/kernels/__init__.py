@@ -6,7 +6,11 @@ pure-jnp oracle (ref.py).  CPU CI validates with interpret=True.
 """
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.fused_weighted_agg import fused_weighted_agg
+from repro.kernels.fused_weighted_agg import (
+    fused_cohort_agg_and_error,
+    fused_multi_weighted_agg,
+    fused_weighted_agg,
+)
 from repro.kernels.rmsnorm import rmsnorm
 from repro.kernels.ssd_scan import ssd_scan
 
@@ -14,6 +18,8 @@ __all__ = [
     "ops",
     "ref",
     "flash_attention",
+    "fused_cohort_agg_and_error",
+    "fused_multi_weighted_agg",
     "fused_weighted_agg",
     "rmsnorm",
     "ssd_scan",

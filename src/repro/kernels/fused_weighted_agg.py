@@ -24,7 +24,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["fused_weighted_agg", "fused_multi_weighted_agg"]
+__all__ = [
+    "fused_weighted_agg",
+    "fused_multi_weighted_agg",
+    "fused_cohort_agg_and_error",
+]
 
 
 def _kernel(g_ref, w_ref, d_ref, sq_ref, acc_ref, *, n_chunks):
@@ -111,3 +115,70 @@ def fused_multi_weighted_agg(
         out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
         interpret=interpret,
     )(g, w)
+
+
+def _cohort_kernel(g_ref, w2_ref, d_ref, err_ref, acc_ref, *, n_chunks):
+    ic = pl.program_id(0)
+
+    @pl.when(ic == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = g_ref[...].astype(jnp.float32)  # (C, BD)
+    w2 = w2_ref[...].astype(jnp.float32)  # (2, C)
+    out = jnp.dot(w2, g, preferred_element_type=jnp.float32)  # (2, BD)
+    d_ref[...] = out[:1]
+    acc_ref[0, 0] += jnp.sum(out[1] ** 2)
+
+    @pl.when(ic == n_chunks - 1)
+    def _done():
+        err_ref[...] = acc_ref[:1, :1]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def fused_cohort_agg_and_error(
+    g: jax.Array,
+    w: jax.Array,
+    lam_c: jax.Array,
+    *,
+    block_d: int = 2048,
+    interpret: bool = False,
+):
+    """Cohort-width (C, D) entry point: estimate + squared-error in ONE pass.
+
+    g (C, D) stacked flattened cohort deltas; w (C,) estimator weights from
+    ``fed.cohort.select_cohort`` (zero on padding); lam_c (C,) the objective
+    weights gathered at the cohort ids (zero on padding).
+
+    Returns (d (D,) f32, err_sq scalar f32) where ``d = sum_c w_c g_c`` and
+    ``err_sq = || sum_c (w_c - lam_c) g_c ||^2`` — the cohort-supported part
+    of the estimator error.  Unlike ``fused_multi_weighted_agg`` driven at N
+    width, nothing here is (N, D)-shaped: the error row is squared and
+    accumulated across chunks in VMEM scratch, so only the (D,) estimate and
+    one scalar ever leave the kernel.
+    """
+    c, d = g.shape
+    bd = min(block_d, d)
+    assert d % bd == 0, (d, bd)
+    n_chunks = d // bd
+    w2 = jnp.stack([w.astype(jnp.float32), w.astype(jnp.float32) - lam_c.astype(jnp.float32)])
+    kernel = functools.partial(_cohort_kernel, n_chunks=n_chunks)
+    d_out, err = pl.pallas_call(
+        kernel,
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((c, bd), lambda ic: (0, ic)),
+            pl.BlockSpec((2, c), lambda ic: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bd), lambda ic: (0, ic)),
+            pl.BlockSpec((1, 1), lambda ic: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, d), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, 128), jnp.float32)],
+        interpret=interpret,
+    )(g, w2)
+    return d_out[0], err[0, 0]

@@ -7,20 +7,43 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "fsdp_axes", "batch_axes"]
+__all__ = ["make_production_mesh", "make_host_mesh", "fsdp_axes", "batch_axes"]
+
+
+def _override_mesh():
+    """REPRO_MESH_SHAPE env override, e.g. "4,4" or "2,4,4" (CI / host runs)."""
+    import os
+
+    override = os.environ.get("REPRO_MESH_SHAPE")
+    if not override:
+        return None
+    shape = tuple(int(x) for x in override.split(","))
+    axes = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
-    import os
-
-    override = os.environ.get("REPRO_MESH_SHAPE")  # e.g. "4,4" or "2,4,4" (CI)
-    if override:
-        shape = tuple(int(x) for x in override.split(","))
-        axes = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
-        return jax.make_mesh(shape, axes)
+    mesh = _override_mesh()
+    if mesh is not None:
+        return mesh
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """(data, model) mesh over whatever devices THIS host exposes.
+
+    REPRO_MESH_SHAPE overrides (same contract as ``make_production_mesh``);
+    otherwise the model axis takes the largest of (16, 8, 4, 2, 1) dividing
+    the device count.  One CPU device yields the degenerate (1, 1) mesh, so
+    the mesh-parallel code path is exercised everywhere the tests run."""
+    mesh = _override_mesh()
+    if mesh is not None:
+        return mesh
+    n = len(jax.devices())
+    model = next(cand for cand in (16, 8, 4, 2, 1) if n % cand == 0)
+    return jax.make_mesh((n // model, model), ("data", "model"))
 
 
 def batch_axes(mesh) -> tuple:

@@ -6,12 +6,19 @@ code path with a 1-device mesh and (typically) --reduced configs, e.g.:
   PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
       --rounds 8 --clients 32 --budget 6 --sampler kvib --seq 64 --ckpt /tmp/fl
 
-The driver is the deployable realization of Algorithm 1:
-  host: sampler state, ISP draw, cohort selection/padding via the shared
-        ``repro.fed.cohort`` contract (probabilities solved ONCE per round,
-        unbiased |S|/C overflow rescaling, inert zero padding)
-  device: the jitted federated round step (local SGD + weighted aggregation
-          + feedback norms in one program)
+The driver is the deployable realization of Algorithm 1, in two modes:
+
+* default (host loop): per-round Python dispatch —
+    host: sampler state, ISP draw, cohort selection/padding via the shared
+          ``repro.fed.cohort`` contract (probabilities solved ONCE per round,
+          unbiased |S|/C overflow rescaling, inert zero padding)
+    device: the jitted federated round step (local SGD + cohort-width
+            weighted aggregation + feedback norms in one program)
+* ``--compiled``: the ENTIRE run is one jitted ``lax.scan`` over rounds
+  (``fed.round.build_fed_scan``) on the host mesh from ``repro.launch.mesh``
+  — draw, selection, device-side batch gather, sharded round step, and
+  sampler update all inside the trace; both modes consume the identical key
+  stream, so they train on the same draws and batches.
 """
 from __future__ import annotations
 
@@ -27,18 +34,9 @@ from repro.configs import get_config
 from repro.core import estimator, make_sampler
 from repro.data import synthetic_tokens
 from repro.fed import cohort as fed_cohort
-from repro.fed.round import RoundSpec, build_round_step
+from repro.fed.round import RoundSpec, build_fed_scan, build_round_step
+from repro.launch.mesh import make_host_mesh
 from repro.models import transformer
-
-
-def make_host_mesh():
-    n = len(jax.devices())
-    model = 1
-    for cand in (16, 8, 4, 2, 1):
-        if n % cand == 0:
-            model = cand
-            break
-    return jax.make_mesh((n // model, model), ("data", "model"))
 
 
 def main() -> None:
@@ -57,6 +55,11 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument(
+        "--compiled", action="store_true",
+        help="run ALL rounds as one jitted lax.scan on the host mesh "
+        "(fed.round.build_fed_scan); default is the per-round host loop",
+    )
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -81,7 +84,39 @@ def main() -> None:
     )
     s_state = sampler.init()
 
-    spec = RoundSpec(cohort=args.cohort, local_steps=args.local_steps, local_lr=args.local_lr)
+    spec = RoundSpec(
+        cohort=args.cohort, local_steps=args.local_steps, local_lr=args.local_lr,
+        local_batch=args.local_batch,
+    )
+
+    if args.compiled:
+        mesh = make_host_mesh()
+        print(f"compiled scan on mesh {dict(mesh.shape)} ({len(mesh.devices.flat)} devices)")
+        run = build_fed_scan(cfg, spec, sampler, ds, mesh=mesh)
+        # Identical key stream to the host loop below: per round
+        # (key, k_draw, k_data) chained splits, stacked up front.
+        pairs = []
+        for _ in range(args.rounds):
+            key, k_draw, k_data = jax.random.split(key, 3)
+            pairs.append(jnp.stack([k_draw, k_data]))
+        t0 = time.time()
+        params, s_state, metrics = run(params, s_state, jnp.stack(pairs))
+        jax.block_until_ready(metrics)
+        wall = time.time() - t0
+        losses = np.asarray(metrics["loss"])
+        cohorts = np.asarray(metrics["cohort_size"])
+        for t in range(args.rounds):
+            print(f"round {t:>3} loss={losses[t]:.4f} cohort={int(cohorts[t])}")
+        print(f"{args.rounds} rounds in one dispatch: {wall:.1f}s "
+              f"({wall / max(args.rounds, 1):.2f}s/round)")
+        dropped_total = int(np.sum(np.asarray(metrics["dropped"])))
+        if dropped_total:
+            print(f"cohort overflow drops: {dropped_total}")
+        if args.ckpt:
+            f = save_checkpoint(args.ckpt, {"params": params, "sampler": s_state})
+            print("final checkpoint ->", f)
+        return
+
     round_step = jax.jit(build_round_step(cfg, spec), donate_argnums=(0,))
 
     dropped_total = 0

@@ -1,0 +1,25 @@
+"""The benchmark regression gate: committed BENCH_*.json ratio baselines must
+survive a re-run on this host within the 2x budget (benchmarks/check_regression).
+"""
+import pytest
+
+
+def test_baselines_have_ratio_dicts():
+    """Tier-1 sanity: the committed artifacts carry the lower-is-better
+    ``ratios`` dicts the gate compares (no bench re-run needed)."""
+    from benchmarks.check_regression import iter_baselines
+
+    baselines = dict(iter_baselines())
+    assert "fed_cohort_width" in baselines
+    assert "fed_round_cohort" in baselines
+    for name, ratios in baselines.items():
+        for key, val in ratios.items():
+            assert isinstance(val, float) and val > 0, f"{name}:{key} = {val!r}"
+
+
+@pytest.mark.slow  # re-times every ratio-bearing benchmark on this host
+def test_bench_ratios_within_regression_budget():
+    from benchmarks.check_regression import check_all
+
+    failures = check_all()
+    assert not failures, "\n".join(failures)

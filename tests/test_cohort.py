@@ -117,6 +117,16 @@ def test_weighted_delta_sum_matches_manual():
     np.testing.assert_allclose(np.asarray(out), ref)
 
 
+def test_host_gather_padding_buffers_are_cached_across_calls():
+    """Satellite perf fix: the all-zero padding buffers are one allocation per
+    (shape, dtype) for the whole process, not rebuilt every round."""
+    a = cohort._zero_block((2, 5, 3), "float32")
+    b = cohort._zero_block((2, 5, 3), "float32")
+    assert a is b
+    assert cohort._zero_block((2, 5, 3), "int32") is not a
+    assert (a == 0).all()
+
+
 @pytest.mark.parametrize("n_valid", [0, 2, 4])
 def test_host_gather_fills_padding_with_zeros(n_valid):
     ds = synthetic_classification(n_clients=8, total=400, seed=3)

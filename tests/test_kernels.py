@@ -7,7 +7,11 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.fused_weighted_agg import fused_multi_weighted_agg, fused_weighted_agg
+from repro.kernels.fused_weighted_agg import (
+    fused_cohort_agg_and_error,
+    fused_multi_weighted_agg,
+    fused_weighted_agg,
+)
 from repro.kernels.rmsnorm import rmsnorm
 from repro.kernels.ssd_scan import ssd_scan
 
@@ -123,6 +127,63 @@ def test_fused_multi_weighted_agg_sweep(dtype, m, c, d, bd):
     want = w @ g.astype(jnp.float32)
     tol = dict(rtol=2e-2, atol=1e-2) if dtype == BF16 else dict(rtol=1e-5, atol=1e-4)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol)
+
+
+@pytest.mark.parametrize("dtype", [F32, BF16])
+@pytest.mark.parametrize("c,d,bd", [(8, 4096, 1024), (20, 2048, 2048), (3, 1024, 256)])
+def test_fused_cohort_agg_and_error_sweep(dtype, c, d, bd):
+    """Cohort-width fused kernel == unfused two-row contraction + host square:
+    d = sum_c w_c g_c and err_sq = ||sum_c (w_c - lam_c) g_c||^2, with the
+    error row never leaving the kernel at (D,) width."""
+    g = jax.random.normal(jax.random.PRNGKey(0), (c, d), dtype)
+    w = jax.random.uniform(jax.random.PRNGKey(1), (c,), jnp.float32)
+    lam_c = jax.random.uniform(jax.random.PRNGKey(2), (c,), jnp.float32) * 0.1
+    # padding-slot contract: zero weight AND zero lam -> slot is inert
+    w = w.at[-1].set(0.0)
+    lam_c = lam_c.at[-1].set(0.0)
+    d_got, sq_got = fused_cohort_agg_and_error(g, w, lam_c, block_d=bd, interpret=True)
+    gf = g.astype(jnp.float32)
+    d_want = w @ gf
+    sq_want = jnp.sum(((w - lam_c) @ gf) ** 2)
+    tol = dict(rtol=2e-2, atol=1e-2) if dtype == BF16 else dict(rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(d_got), np.asarray(d_want), **tol)
+    np.testing.assert_allclose(float(sq_got), float(sq_want), rtol=1e-2 if dtype == BF16 else 1e-4)
+
+
+def test_aggregate_and_error_cohort_matches_scatter_path():
+    """estimator.aggregate_and_error_cohort over (C, ...) pytrees equals
+    estimator.aggregate_and_error over the zero-scattered (N, ...) pytrees —
+    the defining equivalence of the cohort-width contract."""
+    from repro.core import estimator
+    from repro.fed import cohort
+
+    n, c = 24, 5
+    key = jax.random.PRNGKey(6)
+    deltas_c = {
+        "w": jax.random.normal(key, (c, 30, 10)),
+        "b": jax.random.normal(jax.random.PRNGKey(7), (c, 10)),
+    }
+    lam = jax.random.dirichlet(jax.random.PRNGKey(8), jnp.ones(n))
+    sel = cohort.CohortSelection(
+        ids=jnp.asarray([3, 17, 9, 1, 0], jnp.int32),
+        weights=jnp.asarray([1.3, 0.4, 2.0, 0.0, 0.0]),
+        valid=jnp.asarray([True, True, True, False, False]),
+        n_included=jnp.asarray(3, jnp.int32),
+        n_dropped=jnp.asarray(0, jnp.int32),
+    )
+    lam_c = jnp.where(sel.valid, lam[sel.ids], 0.0)
+    d_cw, sq_cw = estimator.aggregate_and_error_cohort(deltas_c, sel.weights, lam_c)
+
+    deltas_n = cohort.scatter_cohort(deltas_c, sel, n)
+    w_n = cohort.scatter_cohort(sel.weights, sel, n)
+    # the scatter path diagnoses against lam restricted to the cohort support
+    lam_n = cohort.scatter_cohort(lam_c, sel, n)
+    d_sc, sq_sc = estimator.aggregate_and_error(deltas_n, w_n, lam_n)
+    for k in ("w", "b"):
+        np.testing.assert_allclose(
+            np.asarray(d_cw[k]), np.asarray(d_sc[k]), rtol=1e-5, atol=1e-5
+        )
+    np.testing.assert_allclose(float(sq_cw), float(sq_sc), rtol=1e-5)
 
 
 @pytest.mark.parametrize("dtype", [F32, BF16])
