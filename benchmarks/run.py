@@ -156,6 +156,82 @@ def bench_fed_round_scan() -> None:
 
 
 # ---------------------------------------------------------------------------
+# Table: segmented compiled horizon vs monolithic scan (preemption-safety tax)
+# ---------------------------------------------------------------------------
+
+
+def bench_fed_scan_segmented() -> None:
+    """What does cutting the compiled horizon into checkpointable segments
+    cost?  Runs the same T-round horizon (fed/server.py segment runner,
+    identical results by construction) as ONE segment vs segments of
+    ``ckpt_every=50`` rounds — the overhead is purely the extra host
+    dispatches and the metric-buffer stitching, NOT checkpoint I/O (no
+    manager attached), which is the steady-state tax a preemption-safe run
+    pays every round.  Target: <10% us/round at ckpt_every=50.  Emits
+    ``RESULTS/BENCH_fed_scan_segmented.json`` with the lower-is-better
+    segmented/monolithic ratio for the regression gate."""
+    from repro.core import make_sampler
+    from repro.data import synthetic_classification
+    from repro.fed import FedConfig, logistic_regression
+    from repro.fed import server as fed_server
+    from repro.fed.state import run_segmented
+
+    n, t_rounds, every = 100, 100, 50
+    ds = synthetic_classification(n_clients=n, total=40 * n, seed=0)
+    cfg = FedConfig(rounds=t_rounds, budget=10, local_steps=1, batch_size=8)
+    sampler = make_sampler("kvib", n=n, budget=cfg.budget, horizon=t_rounds)
+    # donate=False: _timeit re-runs from the same initial state, which
+    # donation would invalidate on accelerator backends.
+    segment, state0 = fed_server.build_segment_runner(
+        logistic_regression(), ds, sampler, cfg, None, donate=False
+    )
+
+    def run_with(ckpt_every):
+        def go():
+            out = run_segmented(state0, t_rounds, segment, ckpt_every=ckpt_every)
+            jax.block_until_ready(out.metrics)
+        return go
+
+    modes = (("monolithic", 0), (f"ckpt{every}", every))
+    goes = {mode: run_with(ckpt_every) for mode, ckpt_every in modes}
+    for go in goes.values():  # compile both segment lengths up front
+        go()
+    # Interleaved best-of-k: the ratio is the payload, and a mean would let a
+    # load spike during one mode's window masquerade as segmentation cost.
+    best = {mode: float("inf") for mode in goes}
+    for _ in range(8):
+        for mode, go in goes.items():
+            t0 = time.perf_counter()
+            go()
+            best[mode] = min(best[mode], time.perf_counter() - t0)
+    us = {mode: b / t_rounds * 1e6 for mode, b in best.items()}
+    for mode, ckpt_every in modes:
+        row(
+            f"fed_scan_segmented_{mode}", us[mode],
+            f"us/round, N={n} T={t_rounds} "
+            + ("one segment" if ckpt_every == 0 else f"{t_rounds // ckpt_every} segments"),
+        )
+    ratio = us[f"ckpt{every}"] / us["monolithic"]
+    row("fed_scan_segmented_overhead", 0,
+        f"segmented/monolithic us-per-round ratio: {ratio:.3f}x (target < 1.10)")
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "BENCH_fed_scan_segmented.json"), "w") as f:
+        json.dump(
+            {
+                "bench": "fed_scan_segmented",
+                "entries": [{
+                    "n": n, "rounds": t_rounds, "ckpt_every": every,
+                    "monolithic_us_per_round": us["monolithic"],
+                    "segmented_us_per_round": us[f"ckpt{every}"],
+                }],
+                # regression-gate ratios: LOWER is better
+                "ratios": {f"segmented_ckpt{every}_over_monolithic": ratio},
+            },
+            f, indent=2,
+        )
+
+
+# ---------------------------------------------------------------------------
 # Table: deployable cohort-only round vs oracle all-clients round (O(C) vs O(N))
 # ---------------------------------------------------------------------------
 
@@ -380,6 +456,7 @@ BENCHES = {
     "fused_agg": bench_fused_aggregation,
     "round_step": bench_round_step,
     "fed_round_scan": bench_fed_round_scan,
+    "fed_scan_segmented": bench_fed_scan_segmented,
     "fed_round_cohort": bench_fed_round_cohort,
     "fed_cohort_width": bench_fed_cohort_width,
     "fig2": table_synthetic,

@@ -1,3 +1,67 @@
-from repro.checkpoint.checkpointer import restore_checkpoint, save_checkpoint
+"""Preemption-safe checkpointing for the segmented compiled horizon.
 
-__all__ = ["save_checkpoint", "restore_checkpoint"]
+The K-Vib sampler's value is its *online* state — losing it to a preemption
+loses the learned sampling probabilities, not just wall-clock.  This package
+is the persistence layer under ``repro.fed.state.run_segmented``: the compiled
+training horizon runs as jitted scan segments, and every segment boundary
+round-trips the canonical carry through a step-numbered checkpoint here.
+
+Layout and manifest spec
+------------------------
+
+A checkpoint *directory* managed by ``CheckpointManager`` contains::
+
+    manifest.json                  commit point — written (tmp + os.replace)
+                                   strictly AFTER the files it references
+    <name>_<step:08d>.npz          flat array leaves, keyed ``leaf_<i>`` in
+                                   tree_flatten order; atomic tmp + replace
+    <name>_<step:08d>.treedef.txt  str(jax.tree_util.tree_structure) sidecar;
+                                   atomic tmp + replace
+
+``manifest.json`` fields::
+
+    format              manifest schema version (currently 1)
+    name                checkpoint basename prefix
+    step                newest committed step (the resume point)
+    file                basename of that step's .npz
+    steps               retained steps, oldest -> newest (``keep_last`` bound)
+    treedef_sha256      sha256[:16] of the newest step's treedef string
+    config_fingerprint  ``config_fingerprint(run config)`` or null — resuming
+                        under a different fingerprint raises
+    versions            {jax, numpy, python} that wrote the checkpoint
+
+Crash anywhere mid-save and the manifest still references the previous
+fully-published step: a torn npz/sidecar pair can exist on disk but never be
+*reachable* through ``latest()`` / ``restore_or_init()``.
+
+What must be in the carry
+-------------------------
+
+Restore is template-shaped: the reader builds the fresh initial state and the
+checkpoint refills it, so everything a resumed process needs must be an array
+leaf of the saved pytree (``repro.fed.state.TrainState`` is the canonical
+carry — see its module docstring, mirroring ``fed/cohort.py``'s "Aggregation
+width" contract section):
+
+* model ``params`` and server-optimizer ``opt_state``;
+* the sampler's online state — a flat pytree of arrays, round counter
+  included as an int32 *array* (``core.samplers`` serializable-state
+  contract: no Python scalars smuggled into carries, they would vanish from
+  checkpoints and be baked into traces as constants);
+* the on-device ``(T, ...)`` metric buffers, so a resumed run's ``History``
+  covers rounds executed before the preemption;
+* the scalar ``round`` index and the PRNG ``key`` from which the remaining
+  rounds' keys derive.
+
+Restore validates structure (treedef string), per-leaf shape AND dtype — any
+mismatch raises; nothing is silently cast.
+"""
+from repro.checkpoint.checkpointer import restore_checkpoint, save_checkpoint
+from repro.checkpoint.manager import CheckpointManager, config_fingerprint
+
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "CheckpointManager",
+    "config_fingerprint",
+]

@@ -6,8 +6,16 @@ must not forget what it learned about clients).
 
 Layout:  <dir>/<name>.npz          flat arrays keyed by index
          <dir>/<name>.treedef.txt  str(jax.tree_util.tree_structure)
-Restore requires a template pytree with matching structure (the standard
-"abstract state" pattern); arrays are checked for shape/dtype drift.
+Both files are published atomically (tmp + ``os.replace``) so a crash mid-save
+can never leave a half-written file under the final name.  Restore requires a
+template pytree with matching structure (the standard "abstract state"
+pattern); the saved treedef string, every leaf's shape, AND every leaf's dtype
+are validated against the template — a mismatch raises instead of silently
+casting, because a dtype drift between writer and reader is a config drift,
+not a convertible format difference.
+
+Step-numbered checkpoints, manifests, retention, and ``latest()`` discovery
+live one level up in ``repro.checkpoint.manager.CheckpointManager``.
 """
 from __future__ import annotations
 
@@ -19,25 +27,46 @@ import numpy as np
 __all__ = ["save_checkpoint", "restore_checkpoint"]
 
 
+def _sidecar_path(fname: str) -> str:
+    return fname[: -len(".npz")] + ".treedef.txt"
+
+
 def save_checkpoint(path: str, state) -> str:
     """Write `state` (any pytree of arrays) to `<path>.npz`. Returns the file."""
     leaves, treedef = jax.tree_util.tree_flatten(state)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
     fname = path if path.endswith(".npz") else path + ".npz"
+    sidecar = _sidecar_path(fname)
+    # Stage BOTH files before publishing EITHER: a crash can leave stale tmp
+    # files but never a half-written .npz or .treedef.txt under its final name.
     tmp = fname + ".tmp"
     with open(tmp, "wb") as f:
         np.savez(f, **arrays)
-    os.replace(tmp, fname)  # atomic publish
-    with open(fname.replace(".npz", ".treedef.txt"), "w") as f:
+    tmp_sidecar = sidecar + ".tmp"
+    with open(tmp_sidecar, "w") as f:
         f.write(str(treedef))
+    os.replace(tmp, fname)  # atomic publish
+    os.replace(tmp_sidecar, sidecar)  # atomic publish
     return fname
 
 
 def restore_checkpoint(path: str, template):
-    """Restore into the structure of `template`; validates shapes/dtypes."""
+    """Restore into the structure of `template`.
+
+    Validates the saved treedef string against the template's and every
+    leaf's shape and dtype — any mismatch raises ``ValueError`` (dtypes are
+    NOT silently cast; see module docstring).
+    """
     fname = path if path.endswith(".npz") else path + ".npz"
     leaves_t, treedef = jax.tree_util.tree_flatten(template)
+    with open(_sidecar_path(fname)) as f:
+        saved_treedef = f.read()
+    if saved_treedef != str(treedef):
+        raise ValueError(
+            "checkpoint treedef does not match template structure:\n"
+            f"  saved:    {saved_treedef}\n  template: {treedef}"
+        )
     with np.load(fname) as data:
         n = len(data.files)
         if n != len(leaves_t):
@@ -52,5 +81,10 @@ def restore_checkpoint(path: str, template):
                 raise ValueError(
                     f"leaf {i}: checkpoint shape {arr.shape} != template {t_arr.shape}"
                 )
-            leaves.append(arr.astype(t_arr.dtype))
+            if arr.dtype != t_arr.dtype:
+                raise ValueError(
+                    f"leaf {i}: checkpoint dtype {arr.dtype} != template "
+                    f"{t_arr.dtype} (refusing to cast silently)"
+                )
+            leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,206 @@
+"""Step-numbered checkpoint management with an atomic JSON manifest.
+
+``CheckpointManager`` turns the flat ``save_checkpoint``/``restore_checkpoint``
+pair into a preemption-safe subsystem for the segmented compiled horizon
+(``repro.fed.state.run_segmented``): every segment boundary publishes a
+step-numbered checkpoint, the manifest write is the atomic commit point, and
+a restarted process discovers where to resume via ``latest()`` /
+``restore_or_init()``.
+
+Directory layout (``repro.checkpoint`` package docstring has the full spec)::
+
+    <dir>/manifest.json                  the commit point (tmp + os.replace)
+    <dir>/<name>_<step:08d>.npz          flat arrays, atomic
+    <dir>/<name>_<step:08d>.treedef.txt  str(treedef) sidecar, atomic
+
+Because the manifest is written strictly AFTER its checkpoint files, a crash
+anywhere mid-save leaves the manifest pointing at the previous fully-published
+step — a torn pair can exist on disk but can never be *referenced*.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import platform
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import restore_checkpoint, save_checkpoint
+
+__all__ = ["CheckpointManager", "config_fingerprint"]
+
+_MANIFEST_FORMAT = 1
+
+
+def config_fingerprint(config: Any) -> str:
+    """Stable short fingerprint of a run configuration.
+
+    Accepts anything JSON-serializable-ish (dataclasses are converted via
+    ``dataclasses.asdict``; unknown objects fall back to ``repr``).  Two
+    processes agreeing on the fingerprint is the manager's guard against
+    resuming a run under a silently different configuration."""
+    if dataclasses.is_dataclass(config) and not isinstance(config, type):
+        config = dataclasses.asdict(config)
+    blob = json.dumps(config, sort_keys=True, default=repr)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def _treedef_hash(state) -> str:
+    treedef = jax.tree_util.tree_structure(state)
+    return hashlib.sha256(str(treedef).encode()).hexdigest()[:16]
+
+
+class CheckpointManager:
+    """Step-numbered atomic checkpoints + manifest + retention + discovery.
+
+    Parameters
+    ----------
+    directory:
+        Where checkpoints and the manifest live (created on first use).
+    keep_last:
+        Retain the newest ``keep_last`` steps; older checkpoint files are
+        deleted when a new step is published (the manifest's ``steps`` list
+        is the authoritative record of what is retained).
+    fingerprint:
+        Optional ``config_fingerprint(...)`` of the run configuration.  It is
+        recorded in the manifest on save and validated on restore: resuming
+        with a different fingerprint raises instead of silently mixing
+        configurations (segment boundaries, key streams, and metric-buffer
+        shapes are all config-derived).
+    name:
+        Basename prefix for checkpoint files.
+    """
+
+    def __init__(
+        self,
+        directory: str,
+        *,
+        keep_last: int = 3,
+        fingerprint: str | None = None,
+        name: str = "state",
+    ):
+        if keep_last < 1:
+            raise ValueError(f"keep_last must be >= 1, got {keep_last}")
+        self.directory = str(directory)
+        self.keep_last = int(keep_last)
+        self.fingerprint = fingerprint
+        self.name = name
+
+    # -- paths ---------------------------------------------------------------
+    @property
+    def manifest_path(self) -> str:
+        return os.path.join(self.directory, "manifest.json")
+
+    def checkpoint_path(self, step: int) -> str:
+        return os.path.join(self.directory, f"{self.name}_{int(step):08d}.npz")
+
+    # -- manifest ------------------------------------------------------------
+    def read_manifest(self) -> dict | None:
+        """The committed manifest dict, or None if nothing was ever published."""
+        try:
+            with open(self.manifest_path) as f:
+                return json.load(f)
+        except FileNotFoundError:
+            return None
+
+    def _write_manifest(self, manifest: dict) -> None:
+        os.makedirs(self.directory, exist_ok=True)
+        tmp = self.manifest_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(manifest, f, indent=2, sort_keys=True)
+        os.replace(tmp, self.manifest_path)  # the atomic commit point
+
+    # -- save / discover / restore -------------------------------------------
+    def save(self, state, step: int) -> str:
+        """Publish ``state`` as step ``step``: files first, then the manifest.
+
+        Returns the checkpoint ``.npz`` path.  Applies retention after the
+        manifest commit (deleting a stale file can never un-commit a step)."""
+        step = int(step)
+        fname = save_checkpoint(self.checkpoint_path(step), state)
+        prev = self.read_manifest()
+        steps = sorted(set((prev.get("steps", []) if prev else [])) | {step})
+        retained = steps[-self.keep_last :]
+        manifest = {
+            "format": _MANIFEST_FORMAT,
+            "name": self.name,
+            "step": max(retained),
+            "file": os.path.basename(fname),
+            "steps": retained,
+            "treedef_sha256": _treedef_hash(state),
+            "config_fingerprint": self.fingerprint,
+            "versions": {
+                "jax": jax.__version__,
+                "numpy": np.__version__,
+                "python": platform.python_version(),
+            },
+        }
+        self._write_manifest(manifest)
+        for stale in steps[: -self.keep_last]:
+            for path in (
+                self.checkpoint_path(stale),
+                self.checkpoint_path(stale)[: -len(".npz")] + ".treedef.txt",
+            ):
+                try:
+                    os.remove(path)
+                except FileNotFoundError:
+                    pass
+        return fname
+
+    def latest(self) -> int | None:
+        """Newest committed step whose checkpoint file exists, else None."""
+        manifest = self.read_manifest()
+        if manifest is None:
+            return None
+        for step in sorted(manifest.get("steps", [manifest["step"]]), reverse=True):
+            if os.path.exists(self.checkpoint_path(step)):
+                return int(step)
+        return None
+
+    def restore(self, template, step: int | None = None):
+        """Restore step ``step`` (default: ``latest()``) into ``template``.
+
+        Validates, in order: the manifest's config fingerprint against this
+        manager's (when both are set), the manifest's treedef hash against
+        the template's, then ``restore_checkpoint``'s own treedef-string /
+        shape / dtype checks against the files themselves."""
+        manifest = self.read_manifest()
+        if manifest is None:
+            raise FileNotFoundError(f"no manifest under {self.directory!r}")
+        if step is None:
+            step = self.latest()
+            if step is None:
+                raise FileNotFoundError(
+                    f"manifest exists but no checkpoint files under {self.directory!r}"
+                )
+        saved_fp = manifest.get("config_fingerprint")
+        if self.fingerprint and saved_fp and saved_fp != self.fingerprint:
+            raise ValueError(
+                f"config fingerprint mismatch: checkpoint was written by a run "
+                f"with fingerprint {saved_fp}, this run has {self.fingerprint} "
+                "— refusing to resume under a different configuration"
+            )
+        if int(step) == manifest["step"]:
+            want = _treedef_hash(template)
+            have = manifest.get("treedef_sha256")
+            if have and have != want:
+                raise ValueError(
+                    f"treedef hash mismatch: manifest has {have}, template "
+                    f"hashes to {want} — the carry structure changed"
+                )
+        return restore_checkpoint(self.checkpoint_path(int(step)), template)
+
+    def restore_or_init(self, template):
+        """(state, step): the latest committed state, or (template, 0) fresh.
+
+        The standard resume entry point: build the fresh initial state as the
+        template, then continue from wherever the manifest says the previous
+        process got to — or from round 0 if it never published anything."""
+        step = self.latest()
+        if step is None:
+            return template, 0
+        return self.restore(template, step), int(step)

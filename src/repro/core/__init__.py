@@ -10,6 +10,7 @@ from repro.core import estimator, regret, samplers, solver
 from repro.core.estimator import aggregate_and_error, aggregate_and_error_cohort
 from repro.core.samplers import (
     Avare,
+    assert_serializable_state,
     ClusteredKVib,
     KVib,
     Mabs,
@@ -45,6 +46,7 @@ __all__ = [
     "UniformRSP",
     "Vrb",
     "make_sampler",
+    "assert_serializable_state",
     "isp_probabilities",
     "mix_probabilities",
     "rsp_probabilities",

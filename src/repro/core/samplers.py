@@ -24,6 +24,27 @@ Two sampling procedures coexist (Section 2 of the paper):
   (Mabs, Vrb, Avare: one draw per step in their origin papers, K draws per
   round in the FL port) via ``SampleResult.counts`` and the without-
   replacement uniform variant used by vanilla FedAvg.
+
+Serializable-state contract
+---------------------------
+
+Sampler state is part of the training state: it rides the compiled horizon's
+scan carry (``repro.fed.state.TrainState``) and round-trips through
+checkpoints (``repro.checkpoint``) at every segment boundary.  Both transports
+impose the same rule, checked by ``assert_serializable_state`` and swept over
+the whole registry in tests:
+
+* the state is a pytree whose every leaf is an ARRAY (jax or numpy) — a
+  Python int/float smuggled into the state would be baked into the trace as a
+  constant (breaking the scan carry) and silently dropped from checkpoints;
+* all dynamic quantities live in those arrays — the round counter is an int32
+  *array* (``SamplerState.t``), not a Python attribute;
+* static configuration (n, budget, horizon, cluster ids, ...) lives on the
+  frozen ``Sampler`` dataclass, NOT in the state: restore is template-shaped,
+  so config must be reconstructible without the checkpoint.
+
+Any sampler obeying this contract can be preempted mid-horizon and resumed
+bit-exactly from ``Sampler.init()`` as the restore template.
 """
 from __future__ import annotations
 
@@ -32,6 +53,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import solver
 
@@ -48,7 +70,26 @@ __all__ = [
     "Osmd",
     "ClusteredKVib",
     "make_sampler",
+    "assert_serializable_state",
 ]
+
+
+def assert_serializable_state(state) -> None:
+    """Enforce the serializable-state contract (module docstring).
+
+    Raises ``TypeError`` if any pytree leaf is not a (jax or numpy) array —
+    i.e. if a Python scalar was smuggled into a carry — and ``ValueError`` on
+    a leafless state (nothing to checkpoint means nothing survives resume)."""
+    leaves = jax.tree_util.tree_leaves(state)
+    if not leaves:
+        raise ValueError("sampler state has no array leaves; nothing would survive a checkpoint round trip")
+    for i, leaf in enumerate(leaves):
+        if not isinstance(leaf, (jax.Array, np.ndarray)):
+            raise TypeError(
+                f"sampler-state leaf {i} is {type(leaf).__name__}, not an array "
+                "— Python scalars are baked into traces as constants and "
+                "dropped from checkpoints (serializable-state contract)"
+            )
 
 
 class SampleResult(NamedTuple):
@@ -108,7 +149,11 @@ def _rsp_wor_uniform_draw(key: jax.Array, n: int, budget: int) -> SampleResult:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class SamplerState:
-    """Generic sampler state: cumulative statistics + round counter."""
+    """Generic sampler state: cumulative statistics + round counter.
+
+    Every field is an array (the round counter included) — see the module's
+    "Serializable-state contract": this pytree is what rides the compiled
+    scan carry and what checkpoints persist across preemptions."""
 
     stats: jax.Array  # (N,) cumulative (importance-weighted) squared feedback
     aux: jax.Array  # (N,) sampler-specific (e.g. Avare's latest estimates)

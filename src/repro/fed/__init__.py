@@ -1,7 +1,8 @@
 from repro.fed.client import local_update, update_norm
 from repro.fed.cohort import CohortSelection, select_cohort
-from repro.fed.round import RoundSpec, build_fed_scan, build_round_step
-from repro.fed.server import FedConfig, History, run_federated
+from repro.fed.round import RoundSpec, build_fed_scan, build_fed_scan_segment, build_round_step
+from repro.fed.server import FedConfig, History, build_segment_runner, run_federated
+from repro.fed.state import TrainState, run_segmented
 from repro.fed.tasks import Task, logistic_regression, mlp_classifier, tiny_lm
 
 __all__ = [
@@ -11,10 +12,14 @@ __all__ = [
     "select_cohort",
     "RoundSpec",
     "build_fed_scan",
+    "build_fed_scan_segment",
     "build_round_step",
     "FedConfig",
     "History",
+    "build_segment_runner",
     "run_federated",
+    "TrainState",
+    "run_segmented",
     "Task",
     "logistic_regression",
     "mlp_classifier",

@@ -33,10 +33,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.fed.cohort import select_cohort, weighted_delta_sum
+from repro.fed.state import TrainState, init_metric_buffers, make_segment_fn
 from repro.models import transformer
 from repro.models.common import ArchConfig
 
-__all__ = ["RoundSpec", "build_round_step", "build_fed_scan"]
+__all__ = [
+    "RoundSpec",
+    "build_round_step",
+    "build_fed_scan",
+    "build_fed_scan_segment",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -188,7 +194,27 @@ def build_fed_scan(
     Returns ``run(params, s_state, round_keys)`` with ``round_keys`` (T, 2, 2)
     stacked (k_draw, k_data) pairs; yields (params, s_state, metrics) where
     metrics are (T,)-stacked ``loss`` / ``cohort_size`` / ``dropped``.
+
+    For the preemption-safe segment-shaped form of the same computation, see
+    ``build_fed_scan_segment``.
     """
+    body = _build_scan_body(cfg, spec, sampler, dataset, mesh, constrain)
+
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+
+    @functools.partial(jax.jit, donate_argnums=donate)
+    def run(params, s_state, round_keys):
+        (params, s_state), metrics = jax.lax.scan(
+            body, (params, s_state), round_keys
+        )
+        return params, s_state, metrics
+
+    return run
+
+
+def _build_scan_body(cfg, spec, sampler, dataset, mesh, constrain):
+    """The per-round scan body shared by ``build_fed_scan`` (monolithic) and
+    ``build_fed_scan_segment``: (params, s_state) carry, (2, key) xs."""
     from repro.core import estimator
 
     lam = dataset.lam
@@ -259,13 +285,63 @@ def build_fed_scan(
         }
         return (params, s_state), metrics
 
-    donate = (0,) if jax.default_backend() != "cpu" else ()
+    return body
 
-    @functools.partial(jax.jit, donate_argnums=donate)
-    def run(params, s_state, round_keys):
-        (params, s_state), metrics = jax.lax.scan(
-            body, (params, s_state), round_keys
+
+def build_fed_scan_segment(
+    cfg: ArchConfig,
+    spec: RoundSpec,
+    sampler,
+    dataset,
+    *,
+    mesh=None,
+    constrain=None,
+    donate: bool = True,
+) -> tuple:
+    """Segment-shaped ``build_fed_scan``: ``(segment_fn, make_state)``.
+
+    The same per-round body as ``build_fed_scan``, cut for the host-driven
+    segmented horizon (``repro.fed.state.run_segmented``) so
+    ``repro.launch.train --compiled`` can publish a checkpoint every
+    ``--ckpt-every`` rounds and survive preemption:
+
+    * ``make_state(params, s_state, key, total_rounds)`` builds the canonical
+      ``TrainState`` at round 0 — ``key`` is the launcher's chain key, from
+      which each round's ``key, k_draw, k_data = split(key, 3)`` derives (the
+      identical stream the host loop and the monolithic ``build_fed_scan``
+      caller consume), and the ``loss``/``cohort_size``/``dropped`` metric
+      buffers are zero-preallocated for the FULL horizon.  It is also the
+      restore template for ``CheckpointManager.restore_or_init``.
+    * ``segment_fn(state, n_rounds)`` comes from the shared
+      ``fed.state.make_segment_fn`` machinery: it derives the next
+      ``n_rounds`` key pairs in-trace, scans the round body, and stitches the
+      stacked metrics into the buffers at offset ``state.round`` — bitwise
+      identical to the monolithic scan under any segmentation
+      (tests/test_segmented_scan.py).
+
+    The launcher round step is stateless on the server side (``server_lr``
+    applied directly), so ``TrainState.opt_state`` is ``()``.
+    """
+    body = _build_scan_body(cfg, spec, sampler, dataset, mesh, constrain)
+
+    def derive_step(k, _):
+        k, k_draw, k_data = jax.random.split(k, 3)
+        return k, jnp.stack([k_draw, k_data])
+
+    def make_state(params, s_state, key, total_rounds: int) -> TrainState:
+        return TrainState(
+            params=params,
+            opt_state=(),
+            sampler=s_state,
+            metrics=init_metric_buffers(
+                body, (params, s_state), jnp.stack([key, key]), total_rounds
+            ),
+            round=jnp.zeros((), jnp.int32),
+            key=key,
         )
-        return params, s_state, metrics
 
-    return run
+    segment = make_segment_fn(
+        body, derive_step,
+        with_opt_state=False, with_round_index=False, donate=donate,
+    )
+    return segment, make_state

@@ -2,14 +2,21 @@
 
 Two execution modes share ONE round body (``_build_round_body``):
 
-* ``compiled=True`` (default): the entire training run — all-clients local
-  update, sampler probabilities/sample/update, unbiased aggregation, server
-  optimizer apply, and metric accumulation (loss, estimator squared error,
-  cohort size, per-round online costs ``l_t(p^t)`` / ``min_p l_t(p)``) —
-  executes as a single jitted ``jax.lax.scan`` over rounds with donated
-  params/opt/sampler state.  Metrics live in on-device (T,)-stacked buffers
-  and the ``History`` is materialized once at the end: zero host round-trips
-  per round instead of the reference loop's 5+.
+* ``compiled=True`` (default): the training run — all-clients local update,
+  sampler probabilities/sample/update, unbiased aggregation, server optimizer
+  apply, and metric accumulation (loss, estimator squared error, cohort size,
+  per-round online costs ``l_t(p^t)`` / ``min_p l_t(p)``) — executes as a
+  host-driven loop over jitted ``lax.scan`` *segments* of
+  ``FedConfig.ckpt_every`` rounds (``ckpt_every=0``: one segment, the
+  monolithic scan) with the carry round-tripping through the canonical
+  ``repro.fed.state.TrainState`` pytree.  Segmentation is a pure reshaping of
+  the horizon — results are bitwise identical for ANY ``ckpt_every``
+  (tests/test_segmented_scan.py) — but each boundary is an escape hatch where
+  a ``repro.checkpoint.CheckpointManager`` can publish the full state, so
+  long horizons survive preemption with the sampler's learned probabilities
+  intact.  Metrics live in on-device (T,)-preallocated buffers stitched
+  segment by segment and the ``History`` is materialized once at the end:
+  zero host round-trips per round instead of the reference loop's 5+.
 * ``compiled=False``: the same body is jitted and dispatched one round at a
   time from Python with per-round host syncs — the debuggable reference loop
   (prints, breakpoints, and per-round inspection work).
@@ -60,10 +67,16 @@ from repro.core import estimator, regret, samplers
 from repro.core.regret import RegretTracker
 from repro.fed import client as fed_client
 from repro.fed import cohort as fed_cohort
+from repro.fed.state import (
+    TrainState,
+    init_metric_buffers,
+    make_segment_fn,
+    run_segmented,
+)
 from repro.fed.tasks import Task
 from repro.optim.fedopt import FedAvgServer, ServerOptimizer
 
-__all__ = ["FedConfig", "History", "run_federated"]
+__all__ = ["FedConfig", "History", "build_segment_runner", "run_federated"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +106,11 @@ class FedConfig:
     # diagnostics.  Pure diagnostic weight at large T*N; turn off to drop it
     # from the on-device metrics (regret costs are still tracked).
     track_scores: bool = True
+    # Compiled-path segment length: the scan runs in jitted segments of this
+    # many rounds so a CheckpointManager can publish the full TrainState at
+    # every boundary.  0 = whole horizon as one segment (the monolithic
+    # scan).  Bitwise-neutral: any value yields identical results.
+    ckpt_every: int = 0
 
     def cohort_slots(self, n_clients: int) -> int:
         c = 2 * self.budget if self.cohort is None else int(self.cohort)
@@ -320,56 +338,129 @@ def _materialize_history(metrics: dict, cfg: FedConfig, has_eval: bool) -> Histo
     return hist
 
 
-def run_federated(
+def _derive_keys_step(k, _):
+    """One link of the reference loop's chained per-round key derivation:
+    ``key, k_data, k_sample = split(key, 3)``.  Both execution paths (and the
+    pre-scan history of this repo) consume this identical randomness stream,
+    and the segmented runner advances the SAME chain segment by segment."""
+    k, kd, ks = jax.random.split(k, 3)
+    return k, jnp.stack([kd, ks])
+
+
+def build_segment_runner(
     task: Task,
     dataset,
     sampler: samplers.Sampler,
     cfg: FedConfig,
     eval_data: tuple | None = None,
-) -> History:
-    t0 = time.time()
+    *,
+    donate: bool = True,
+):
+    """The segment-shaped compiled loop: ``(segment_fn, init_state)``.
+
+    ``init_state`` is the canonical ``TrainState`` at round 0 — params/opt/
+    sampler freshly initialized from ``cfg.seed``, metric buffers zero-
+    preallocated for the full ``cfg.rounds`` horizon — and is also the
+    restore template for ``CheckpointManager.restore_or_init``.
+
+    ``segment_fn(state, n_rounds)`` comes from the shared
+    ``fed.state.make_segment_fn`` machinery: it derives the next ``n_rounds``
+    key pairs from ``state.key`` along the chained split sequence, scans the
+    round body over them, and stitches the stacked per-round metrics into the
+    (T,)-buffers at offset ``state.round``.  Because the bodies see the same
+    carries, keys, and round indices under any segmentation, results are
+    bitwise identical for every ``n_rounds`` schedule — a segment boundary is
+    pure escape hatch, not a numeric event.
+
+    ``donate=False`` keeps the input state alive across calls (benchmarks
+    re-time the same state; donation would invalidate it on non-CPU
+    backends)."""
+    body = _build_round_body(task, dataset, sampler, cfg, eval_data)
+
     key = jax.random.PRNGKey(cfg.seed)
     key, init_key = jax.random.split(key)
     params = task.init(init_key)
     opt_state = cfg.server_opt.init(params)
     s_state = sampler.init()
 
-    # Per-round (k_data, k_sample) pairs, derived up front with the reference
-    # loop's chained `key, k_data, k_sample = split(key, 3)` sequence so both
-    # execution paths (and the pre-scan history of this repo) consume the
-    # identical randomness stream.
-    @functools.partial(jax.jit, static_argnames=("rounds",))
-    def derive_keys(key, rounds):
-        def step(k, _):
-            k, kd, ks = jax.random.split(k, 3)
-            return k, jnp.stack([kd, ks])
-        _, pairs = jax.lax.scan(step, key, None, length=rounds)
-        return pairs
+    init_state = TrainState(
+        params=params,
+        opt_state=opt_state,
+        sampler=s_state,
+        metrics=init_metric_buffers(
+            body,
+            (params, opt_state, s_state),
+            (jnp.zeros((), jnp.int32), key, key),
+            cfg.rounds,
+        ),
+        round=jnp.zeros((), jnp.int32),
+        key=key,
+    )
+    segment = make_segment_fn(
+        body, _derive_keys_step,
+        with_opt_state=True, with_round_index=True, donate=donate,
+    )
+    return segment, init_state
 
-    round_keys = derive_keys(key, cfg.rounds)  # (T, 2, key_dim)
-    ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
 
-    body = _build_round_body(task, dataset, sampler, cfg, eval_data)
+def run_federated(
+    task: Task,
+    dataset,
+    sampler: samplers.Sampler,
+    cfg: FedConfig,
+    eval_data: tuple | None = None,
+    *,
+    ckpt_manager=None,
+) -> History:
+    """Run Algorithm 1; see the module docstring for the execution modes.
 
-    # Buffer donation frees the previous round's params/opt/sampler state in
-    # place; the CPU backend doesn't implement donation and warns, so gate it.
-    donate = (0, 1, 2) if jax.default_backend() != "cpu" else ()
+    ``ckpt_manager`` (a ``repro.checkpoint.CheckpointManager``, compiled path
+    only): restore-or-init from its manifest before running, and publish the
+    full ``TrainState`` at every ``cfg.ckpt_every`` segment boundary — a
+    preempted run re-invoked with the same config and manager continues from
+    the last committed round and produces the identical ``History``."""
+    t0 = time.time()
 
     if cfg.compiled:
-
-        @functools.partial(jax.jit, donate_argnums=donate)
-        def scan_all(params, opt_state, s_state, keys):
-            (params, opt_state, s_state), stacked = jax.lax.scan(
-                body, (params, opt_state, s_state), (ts, keys[:, 0], keys[:, 1])
+        if ckpt_manager is not None and cfg.ckpt_every <= 0:
+            # One whole-horizon segment would mean zero mid-run checkpoints —
+            # the manager could never protect anything before the final round.
+            raise ValueError(
+                "run_federated(ckpt_manager=...) needs cfg.ckpt_every > 0; "
+                f"got ckpt_every={cfg.ckpt_every}"
             )
-            return params, opt_state, s_state, stacked
-
-        params, opt_state, s_state, stacked = scan_all(
-            params, opt_state, s_state, round_keys
+        segment, state = build_segment_runner(task, dataset, sampler, cfg, eval_data)
+        if ckpt_manager is not None:
+            state, _ = ckpt_manager.restore_or_init(state)
+        state = run_segmented(
+            state,
+            cfg.rounds,
+            segment,
+            ckpt_every=cfg.ckpt_every,
+            manager=ckpt_manager,
         )
-        jax.block_until_ready(stacked)
-        metrics = jax.tree_util.tree_map(np.asarray, stacked)
+        jax.block_until_ready(state)
+        params = state.params
+        metrics = jax.tree_util.tree_map(np.asarray, state.metrics)
     else:
+        key = jax.random.PRNGKey(cfg.seed)
+        key, init_key = jax.random.split(key)
+        params = task.init(init_key)
+        opt_state = cfg.server_opt.init(params)
+        s_state = sampler.init()
+
+        # Per-round (k_data, k_sample) pairs, derived up front along the same
+        # chained-split sequence the segmented runner walks.
+        @functools.partial(jax.jit, static_argnames=("rounds",))
+        def derive_keys(key, rounds):
+            _, pairs = jax.lax.scan(_derive_keys_step, key, None, length=rounds)
+            return pairs
+
+        round_keys = derive_keys(key, cfg.rounds)  # (T, 2, key_dim)
+        ts = jnp.arange(cfg.rounds, dtype=jnp.int32)
+
+        body = _build_round_body(task, dataset, sampler, cfg, eval_data)
+        donate = jax.default_backend() != "cpu"
         step = jax.jit(body, donate_argnums=(0,) if donate else ())
         per_round = []
         for t in range(cfg.rounds):

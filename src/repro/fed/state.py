@@ -1,0 +1,207 @@
+"""Canonical compiled-horizon carry (``TrainState``) + the segmented driver.
+
+The K-Vib sampler's value is its *online* state: the cumulative feedback it
+accumulates over the horizon is what drives the variance-reduced regret bound
+(PAPER.md section 4), so a preempted server that loses sampler state loses the
+learned sampling probabilities, not just wall-clock.  This module is the
+preemption-safety layer for the compiled execution paths: instead of running
+the whole horizon as one opaque ``lax.scan``, the horizon is cut into jitted
+scan *segments* of ``ckpt_every`` rounds driven from a host loop that can
+publish a checkpoint (``repro.checkpoint.CheckpointManager``) at every
+segment boundary.
+
+What must be in the carry
+-------------------------
+
+``TrainState`` is the single canonical pytree that round-trips through
+segment boundaries AND through checkpoints.  Everything a resumed process
+needs to continue the run bit-for-bit must live here as an *array* leaf:
+
+* ``params``     — model parameters (pytree of arrays).
+* ``opt_state``  — server-optimizer state (``()`` for stateless FedAvg).
+* ``sampler``    — the sampler's online state (``core.samplers.SamplerState``
+                   contract: flat pytree of arrays, no Python scalars).
+* ``metrics``    — dict of on-device ``(T, ...)`` per-round metric buffers,
+                   preallocated for the FULL horizon and stitched segment by
+                   segment via ``lax.dynamic_update_slice`` — a resumed run's
+                   ``History`` therefore covers the whole horizon, including
+                   rounds executed before the preemption.
+* ``round``      — scalar int32: the next round to execute (also the write
+                   offset into the metric buffers and the checkpoint step).
+* ``key``        — the PRNG key from which the remaining rounds' per-round
+                   keys derive.  Each segment advances it by exactly
+                   ``n_rounds`` chained splits, so any segmentation of the
+                   horizon consumes the identical key stream.
+
+Segmentation is a pure reshaping of the horizon: for any ``ckpt_every`` the
+per-round bodies see the same carries, keys, and round indices, so results
+are bitwise identical to the monolithic scan (tests/test_segmented_scan.py
+pins this at ``ckpt_every`` in {1, 7, T}).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TrainState", "make_segment_fn", "init_metric_buffers", "run_segmented"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    """The canonical compiled-horizon carry (see module docstring)."""
+
+    params: Any
+    opt_state: Any
+    sampler: Any
+    metrics: Any
+    round: jax.Array  # scalar int32 — next round to execute
+    key: jax.Array  # PRNG key for the remaining rounds' key derivation
+
+    def tree_flatten(self):
+        children = (
+            self.params,
+            self.opt_state,
+            self.sampler,
+            self.metrics,
+            self.round,
+            self.key,
+        )
+        return children, None
+
+    @classmethod
+    def tree_unflatten(cls, _, children):
+        return cls(*children)
+
+
+def init_metric_buffers(body, carry, xs_example, total_rounds: int):
+    """Zero-preallocated full-horizon ``(T, ...)`` metric buffers, shaped by
+    ``jax.eval_shape`` of the round body's per-round metrics output — the
+    buffers a segment stitches into at offset ``state.round``."""
+    _, metric_shapes = jax.eval_shape(body, carry, xs_example)
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros((int(total_rounds),) + s.shape, s.dtype), metric_shapes
+    )
+
+
+def make_segment_fn(
+    body,
+    derive_step,
+    *,
+    with_opt_state: bool,
+    with_round_index: bool,
+    donate: bool = True,
+):
+    """The ONE implementation of a jitted scan segment over ``TrainState``.
+
+    Both compiled paths — ``fed.server.build_segment_runner`` and
+    ``fed.round.build_fed_scan_segment`` — get their segment function here,
+    so the bitwise-neutrality contract (key-chain advance, metric-buffer
+    stitch offset, round accounting, donation gating) lives in exactly one
+    place.  The returned ``segment(state, n_rounds)`` (jitted, ``n_rounds``
+    static):
+
+    1. derives the next ``n_rounds`` key pairs by scanning ``derive_step``
+       (one chained-split link, returning ``(key, stacked pair)``) from
+       ``state.key``;
+    2. scans ``body`` over them — carry ``(params, opt_state, sampler)``
+       when ``with_opt_state`` else ``(params, sampler)``; xs
+       ``(ts, pairs[:, 0], pairs[:, 1])`` with ``ts = round + arange`` when
+       ``with_round_index`` else the raw ``pairs``;
+    3. stitches the stacked per-round metrics into the full-horizon buffers
+       at offset ``state.round`` via ``dynamic_update_slice``;
+    4. returns the advanced ``TrainState`` (``round + n_rounds``, new key).
+
+    ``donate=False`` keeps the input state alive across calls (benchmarks
+    re-time from the same state; donation would invalidate it on non-CPU
+    backends — the CPU backend never donates).
+    """
+    donate_argnums = (0,) if donate and jax.default_backend() != "cpu" else ()
+
+    @functools.partial(jax.jit, static_argnums=(1,), donate_argnums=donate_argnums)
+    def segment(state: TrainState, n_rounds: int) -> TrainState:
+        key, pairs = jax.lax.scan(derive_step, state.key, None, length=n_rounds)
+        if with_opt_state:
+            carry = (state.params, state.opt_state, state.sampler)
+        else:
+            carry = (state.params, state.sampler)
+        if with_round_index:
+            ts = state.round + jnp.arange(n_rounds, dtype=jnp.int32)
+            xs = (ts, pairs[:, 0], pairs[:, 1])
+        else:
+            xs = pairs
+        carry, stacked = jax.lax.scan(body, carry, xs)
+        if with_opt_state:
+            params, opt_state, s_state = carry
+        else:
+            (params, s_state), opt_state = carry, state.opt_state
+        metrics = jax.tree_util.tree_map(
+            lambda buf, seg: jax.lax.dynamic_update_slice(
+                buf, seg, (state.round,) + (0,) * (buf.ndim - 1)
+            ),
+            state.metrics,
+            stacked,
+        )
+        return TrainState(
+            params=params,
+            opt_state=opt_state,
+            sampler=s_state,
+            metrics=metrics,
+            round=state.round + n_rounds,
+            key=key,
+        )
+
+    return segment
+
+
+def run_segmented(
+    state: TrainState,
+    total_rounds: int,
+    segment_fn: Callable[[TrainState, int], TrainState],
+    *,
+    ckpt_every: int = 0,
+    manager=None,
+    on_segment: Callable[[TrainState, int], None] | None = None,
+    max_segments: int | None = None,
+) -> TrainState:
+    """Host-driven loop over jitted scan segments of ``ckpt_every`` rounds.
+
+    Starts from ``state.round`` (0 for a fresh state, later for one restored
+    from a checkpoint) and calls ``segment_fn(state, n_rounds)`` — a function
+    jitted with a *static* segment length — until ``total_rounds`` is reached.
+    ``ckpt_every <= 0`` runs the remainder as ONE segment (the monolithic
+    scan, now merely the degenerate segmentation).
+
+    After each segment, in order: ``manager.save(state, step=rounds_done)``
+    publishes a checkpoint (atomic npz + manifest — the manifest write is the
+    commit point), then ``on_segment(state, rounds_done)`` runs (progress
+    printing, cooperative-preemption hooks).  ``max_segments`` stops the loop
+    early after that many segments — cooperative preemption for time-limited
+    schedulers, and what the resume tests use to simulate a mid-horizon kill.
+
+    Returns the final (or preempted) state; ``int(state.round)`` tells the
+    caller how far it got.
+    """
+    done = int(state.round)
+    if done > total_rounds:
+        raise ValueError(
+            f"state.round={done} is past the horizon total_rounds={total_rounds}"
+        )
+    seg = int(ckpt_every) if ckpt_every and ckpt_every > 0 else int(total_rounds)
+    n_segments = 0
+    while done < total_rounds:
+        n = min(seg, total_rounds - done)
+        state = segment_fn(state, n)
+        done += n
+        if manager is not None:
+            manager.save(state, step=done)
+        if on_segment is not None:
+            on_segment(state, done)
+        n_segments += 1
+        if max_segments is not None and n_segments >= max_segments:
+            break
+    return state

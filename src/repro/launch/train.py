@@ -14,27 +14,37 @@ The driver is the deployable realization of Algorithm 1, in two modes:
           unbiased |S|/C overflow rescaling, inert zero padding)
     device: the jitted federated round step (local SGD + cohort-width
             weighted aggregation + feedback norms in one program)
-* ``--compiled``: the ENTIRE run is one jitted ``lax.scan`` over rounds
-  (``fed.round.build_fed_scan``) on the host mesh from ``repro.launch.mesh``
-  — draw, selection, device-side batch gather, sharded round step, and
-  sampler update all inside the trace; both modes consume the identical key
-  stream, so they train on the same draws and batches.
+* ``--compiled``: the run executes as jitted ``lax.scan`` *segments* over
+  rounds (``fed.round.build_fed_scan_segment`` driven by
+  ``fed.state.run_segmented``) on the host mesh from ``repro.launch.mesh`` —
+  draw, selection, device-side batch gather, sharded round step, and sampler
+  update all inside the trace; both modes consume the identical key stream,
+  so they train on the same draws and batches.  ``--ckpt-every N`` cuts the
+  horizon into N-round segments (bitwise-neutral) and, with ``--ckpt DIR``,
+  publishes the full ``TrainState`` — params, sampler's learned state, metric
+  buffers, round index, RNG key — through a ``CheckpointManager`` at every
+  boundary; ``--resume`` restarts a SIGKILL'd run from the manifest and
+  reproduces the uninterrupted run's results exactly
+  (tests/test_launchers.py).
 """
 from __future__ import annotations
 
 import argparse
+import os
+import signal
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import CheckpointManager, config_fingerprint, save_checkpoint
 from repro.configs import get_config
 from repro.core import estimator, make_sampler
 from repro.data import synthetic_tokens
 from repro.fed import cohort as fed_cohort
-from repro.fed.round import RoundSpec, build_fed_scan, build_round_step
+from repro.fed.round import RoundSpec, build_fed_scan_segment, build_round_step
+from repro.fed.state import run_segmented
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer
 
@@ -54,11 +64,21 @@ def main() -> None:
     ap.add_argument("--local-lr", type=float, default=0.05)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default="")
-    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument(
+        "--ckpt-every", type=int, default=0,
+        help="checkpoint every N rounds; with --compiled this is the scan "
+        "segment length (bitwise-neutral) and checkpoints go to the "
+        "<ckpt>_ckpts/ CheckpointManager directory",
+    )
     ap.add_argument(
         "--compiled", action="store_true",
-        help="run ALL rounds as one jitted lax.scan on the host mesh "
-        "(fed.round.build_fed_scan); default is the per-round host loop",
+        help="run the rounds as jitted lax.scan segments on the host mesh "
+        "(fed.round.build_fed_scan_segment); default is the per-round host loop",
+    )
+    ap.add_argument(
+        "--resume", action="store_true",
+        help="with --compiled --ckpt --ckpt-every: resume from the newest "
+        "committed step in <ckpt>_ckpts/manifest.json (fresh start if none)",
     )
     args = ap.parse_args()
 
@@ -92,24 +112,62 @@ def main() -> None:
     if args.compiled:
         mesh = make_host_mesh()
         print(f"compiled scan on mesh {dict(mesh.shape)} ({len(mesh.devices.flat)} devices)")
-        run = build_fed_scan(cfg, spec, sampler, ds, mesh=mesh)
+        segment, make_state = build_fed_scan_segment(cfg, spec, sampler, ds, mesh=mesh)
         # Identical key stream to the host loop below: per round
-        # (key, k_draw, k_data) chained splits, stacked up front.
-        pairs = []
-        for _ in range(args.rounds):
-            key, k_draw, k_data = jax.random.split(key, 3)
-            pairs.append(jnp.stack([k_draw, k_data]))
+        # (key, k_draw, k_data) chained splits, derived in-trace segment by
+        # segment from the TrainState's chain key.
+        state = make_state(params, s_state, key, args.rounds)
+
+        manager = None
+        if args.resume and not (args.ckpt and args.ckpt_every):
+            print("warning: --resume needs --ckpt AND --ckpt-every; starting fresh")
+        if args.ckpt and args.ckpt_every:
+            fingerprint = config_fingerprint({
+                "arch": cfg.name, "reduced": args.reduced, "sampler": args.sampler,
+                "rounds": args.rounds, "clients": args.clients,
+                "budget": args.budget, "cohort": args.cohort,
+                "local_steps": args.local_steps, "local_batch": args.local_batch,
+                "seq": args.seq, "local_lr": args.local_lr, "seed": args.seed,
+            })
+            manager = CheckpointManager(f"{args.ckpt}_ckpts", fingerprint=fingerprint)
+            if args.resume:
+                state, start = manager.restore_or_init(state)
+                if start:
+                    print(f"resumed from checkpoint step {start} "
+                          f"({args.rounds - start} rounds remaining)")
+
+        # Test hook: self-SIGKILL after N published segments — how the
+        # kill/resume integration test simulates a preemption that strikes
+        # between segment boundaries.
+        kill_after = int(os.environ.get("REPRO_KILL_AFTER_SEGMENTS", "0"))
+        segments_done = []
+
+        def on_segment(st, rounds_done):
+            segments_done.append(rounds_done)
+            if manager is not None:
+                print(f"checkpoint step {rounds_done} -> {manager.directory}")
+            if kill_after and len(segments_done) >= kill_after:
+                print(f"REPRO_KILL_AFTER_SEGMENTS={kill_after}: SIGKILL", flush=True)
+                os.kill(os.getpid(), signal.SIGKILL)
+
+        start_round = int(state.round)
         t0 = time.time()
-        params, s_state, metrics = run(params, s_state, jnp.stack(pairs))
-        jax.block_until_ready(metrics)
+        state = run_segmented(
+            state, args.rounds, segment,
+            ckpt_every=args.ckpt_every, manager=manager, on_segment=on_segment,
+        )
+        jax.block_until_ready(state)
         wall = time.time() - t0
-        losses = np.asarray(metrics["loss"])
-        cohorts = np.asarray(metrics["cohort_size"])
+        params, s_state = state.params, state.sampler
+        losses = np.asarray(state.metrics["loss"])
+        cohorts = np.asarray(state.metrics["cohort_size"])
         for t in range(args.rounds):
             print(f"round {t:>3} loss={losses[t]:.4f} cohort={int(cohorts[t])}")
-        print(f"{args.rounds} rounds in one dispatch: {wall:.1f}s "
-              f"({wall / max(args.rounds, 1):.2f}s/round)")
-        dropped_total = int(np.sum(np.asarray(metrics["dropped"])))
+        n_disp = len(segments_done)
+        disp = "one dispatch" if n_disp == 1 else f"{n_disp} dispatches"
+        print(f"{args.rounds - start_round} rounds in {disp}: {wall:.1f}s "
+              f"({wall / max(args.rounds - start_round, 1):.2f}s/round)")
+        dropped_total = int(np.sum(np.asarray(state.metrics["dropped"])))
         if dropped_total:
             print(f"cohort overflow drops: {dropped_total}")
         if args.ckpt:

@@ -12,6 +12,7 @@ def test_baselines_have_ratio_dicts():
     baselines = dict(iter_baselines())
     assert "fed_cohort_width" in baselines
     assert "fed_round_cohort" in baselines
+    assert "fed_scan_segmented" in baselines
     for name, ratios in baselines.items():
         for key, val in ratios.items():
             assert isinstance(val, float) and val > 0, f"{name}:{key} = {val!r}"

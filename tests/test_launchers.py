@@ -55,6 +55,53 @@ def test_train_cli_end_to_end(tmp_path):
     assert all(np.isfinite(losses)) and len(losses) == 3
 
 
+@pytest.mark.slow  # three fresh-interpreter CLI runs with model compiles
+def test_compiled_train_survives_sigkill_and_resumes(tmp_path):
+    """Acceptance: a SIGKILL'd ``--compiled`` run resumes from the
+    CheckpointManager manifest and converges to the SAME final params as an
+    uninterrupted run.  REPRO_KILL_AFTER_SEGMENTS makes the launcher SIGKILL
+    itself right after publishing segment 1 of 2 — a real process death, not
+    a cooperative exit — then ``--resume`` finishes the horizon."""
+    args = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", "smollm-360m", "--reduced", "--compiled",
+        "--rounds", "4", "--clients", "8", "--budget", "3", "--cohort", "4",
+        "--seq", "32", "--local-batch", "2", "--ckpt-every", "2",
+    ]
+    base = subprocess.run(
+        args + ["--ckpt", str(tmp_path / "base")],
+        capture_output=True, text=True, timeout=600, env=_ENV,
+    )
+    assert base.returncode == 0, base.stderr[-2000:]
+
+    killed = subprocess.run(
+        args + ["--ckpt", str(tmp_path / "kill")],
+        capture_output=True, text=True, timeout=600,
+        env={**_ENV, "REPRO_KILL_AFTER_SEGMENTS": "1"},
+    )
+    assert killed.returncode == -9, (killed.returncode, killed.stderr[-2000:])
+    assert "final checkpoint" not in killed.stdout  # it really died mid-run
+    ckpt_dir = tmp_path / "kill_ckpts"
+    assert (ckpt_dir / "manifest.json").exists()
+    import json
+    assert json.loads((ckpt_dir / "manifest.json").read_text())["step"] == 2
+
+    resumed = subprocess.run(
+        args + ["--ckpt", str(tmp_path / "kill"), "--resume"],
+        capture_output=True, text=True, timeout=600, env=_ENV,
+    )
+    assert resumed.returncode == 0, resumed.stderr[-2000:]
+    assert "resumed from checkpoint step 2" in resumed.stdout
+    # the resumed History covers the whole horizon, pre-kill rounds included
+    assert "round   0" in resumed.stdout and "round   3" in resumed.stdout
+
+    a = np.load(tmp_path / "base.npz")
+    b = np.load(tmp_path / "kill.npz")
+    assert a.files == b.files and len(a.files) > 0
+    for k in a.files:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
 @pytest.mark.slow  # fresh-interpreter CLI: jax import + model compile per run
 def test_serve_cli_end_to_end():
     proc = subprocess.run(

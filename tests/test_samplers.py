@@ -26,17 +26,25 @@ def test_registry_complete_and_exported():
 
 
 def test_cohort_width_entry_points_exported():
-    """The cohort-width aggregation surface reaches users through the package
-    __all__s: estimator entry points via repro.core, the scan/round entry
-    points via repro.fed, and the Pallas kernels via repro.kernels."""
+    """The cohort-width aggregation surface AND the segmented-horizon /
+    checkpoint subsystem reach users through the package __all__s: estimator
+    entry points via repro.core, the scan/round/segment entry points via
+    repro.fed, the Pallas kernels via repro.kernels, and the checkpoint API
+    via repro.checkpoint."""
+    import repro.checkpoint as checkpoint
     import repro.core as core
     import repro.fed as fed
     import repro.kernels as kernels
 
     for pkg, names in (
-        (core, ("aggregate_and_error", "aggregate_and_error_cohort")),
-        (fed, ("RoundSpec", "build_fed_scan", "build_round_step")),
+        (core, ("aggregate_and_error", "aggregate_and_error_cohort",
+                "assert_serializable_state")),
+        (fed, ("RoundSpec", "build_fed_scan", "build_fed_scan_segment",
+               "build_round_step", "build_segment_runner", "run_segmented",
+               "TrainState")),
         (kernels, ("fused_multi_weighted_agg", "fused_cohort_agg_and_error")),
+        (checkpoint, ("save_checkpoint", "restore_checkpoint",
+                      "CheckpointManager", "config_fingerprint")),
     ):
         for name in names:
             assert name in pkg.__all__, f"{pkg.__name__}.__all__ missing {name}"
@@ -49,6 +57,9 @@ def test_cohort_width_entry_points_exported():
     # the module itself through importlib
     fwa_mod = importlib.import_module("repro.kernels.fused_weighted_agg")
     assert "fused_cohort_agg_and_error" in fwa_mod.__all__
+    mgr_mod = importlib.import_module("repro.checkpoint.manager")
+    assert "CheckpointManager" in mgr_mod.__all__ and "config_fingerprint" in mgr_mod.__all__
+    assert "assert_serializable_state" in samplers.__all__
 
 
 @pytest.mark.parametrize("name", ALL_SAMPLERS)
