@@ -2,7 +2,10 @@
 
 Emits ``name,us_per_call,derived`` CSV rows.  Experiment-derived rows read
 the JSON artifacts produced by the example drivers (results/*.json); compute
-benches time the hot paths on this host.
+benches time the hot paths on this host.  The federated benches construct
+their experiment pieces through ``repro.api`` specs (``api.build``), so the
+benchmarked configuration is the same serializable description every other
+front door consumes.
 
   PYTHONPATH=src python -m benchmarks.run [--filter substr]
 """
@@ -109,16 +112,22 @@ def bench_fed_round_scan() -> None:
     T=50).  Both execute the identical round body."""
     import jax.numpy as jnp
 
-    from repro.core import make_sampler
-    from repro.data import synthetic_classification
-    from repro.fed import FedConfig, logistic_regression
+    from repro import api
     from repro.fed import server as fed_server
 
     n, t_rounds = 100, 50
-    ds = synthetic_classification(n_clients=n, total=200 * n, seed=0)
-    task = logistic_regression()
-    cfg = FedConfig(rounds=t_rounds, budget=10, local_steps=1, batch_size=8)
-    sampler = make_sampler("kvib", n=n, budget=cfg.budget, horizon=t_rounds)
+    spec = api.ExperimentSpec(
+        task=api.TaskSpec(
+            name="logreg", dataset="synthetic_classification",
+            dataset_kwargs=dict(n_clients=n, total=200 * n, seed=0),
+        ),
+        sampler=api.SamplerSpec(name="kvib", kwargs=dict(horizon=t_rounds)),
+        federation=api.FederationSpec(
+            rounds=t_rounds, budget=10, local_steps=1, batch_size=8,
+        ),
+    )
+    built = api.build(spec)
+    task, ds, sampler, cfg = built.task, built.dataset, built.sampler, built.fed_config
     body = fed_server._build_round_body(task, ds, sampler, cfg, None)
 
     key = jax.random.PRNGKey(0)
@@ -170,20 +179,27 @@ def bench_fed_scan_segmented() -> None:
     pays every round.  Target: <10% us/round at ckpt_every=50.  Emits
     ``RESULTS/BENCH_fed_scan_segmented.json`` with the lower-is-better
     segmented/monolithic ratio for the regression gate."""
-    from repro.core import make_sampler
-    from repro.data import synthetic_classification
-    from repro.fed import FedConfig, logistic_regression
+    from repro import api
     from repro.fed import server as fed_server
     from repro.fed.state import run_segmented
 
     n, t_rounds, every = 100, 100, 50
-    ds = synthetic_classification(n_clients=n, total=40 * n, seed=0)
-    cfg = FedConfig(rounds=t_rounds, budget=10, local_steps=1, batch_size=8)
-    sampler = make_sampler("kvib", n=n, budget=cfg.budget, horizon=t_rounds)
+    spec = api.ExperimentSpec(
+        task=api.TaskSpec(
+            name="logreg", dataset="synthetic_classification",
+            dataset_kwargs=dict(n_clients=n, total=40 * n, seed=0),
+        ),
+        sampler=api.SamplerSpec(name="kvib", kwargs=dict(horizon=t_rounds)),
+        federation=api.FederationSpec(
+            rounds=t_rounds, budget=10, local_steps=1, batch_size=8,
+        ),
+    )
+    built = api.build(spec)
     # donate=False: _timeit re-runs from the same initial state, which
     # donation would invalidate on accelerator backends.
     segment, state0 = fed_server.build_segment_runner(
-        logistic_regression(), ds, sampler, cfg, None, donate=False
+        built.task, built.dataset, built.sampler, built.fed_config, None,
+        donate=False,
     )
 
     def run_with(ckpt_every):
@@ -244,28 +260,37 @@ def bench_fed_round_cohort() -> None:
     deployable curve should stay roughly flat.  Emits the per-N pairs to
     ``RESULTS/BENCH_fed_round_cohort.json`` so the perf trajectory records
     deployable-mode us/round across PRs."""
-    from repro.core import make_sampler
-    from repro.data import synthetic_classification
-    from repro.fed import FedConfig, logistic_regression
+    from repro import api
     from repro.fed import server as fed_server
 
     k, c = 10, 20
-    task = logistic_regression()
+
+    def spec_for(n, oracle):
+        return api.ExperimentSpec(
+            task=api.TaskSpec(
+                name="logreg", dataset="synthetic_classification",
+                dataset_kwargs=dict(n_clients=n, total=40 * n, seed=0),
+            ),
+            sampler=api.SamplerSpec(name="kvib", kwargs=dict(horizon=100)),
+            federation=api.FederationSpec(
+                budget=k, local_steps=1, batch_size=16,
+                cohort=None if oracle else c,
+            ),
+            execution=api.ExecutionSpec(oracle_metrics=oracle),
+        )
+
     entries = []
     for n in (64, 256, 1024):
-        ds = synthetic_classification(n_clients=n, total=40 * n, seed=0)
-        sampler = make_sampler("kvib", n=n, budget=k, horizon=100)
-        params = task.init(jax.random.PRNGKey(0))
-        xs = (jnp.zeros((), jnp.int32), jax.random.PRNGKey(1), jax.random.PRNGKey(2))
         us = {}
-        for mode, cfg in (
-            ("oracle", FedConfig(budget=k, local_steps=1, batch_size=16)),
-            (
-                "deployable",
-                FedConfig(budget=k, local_steps=1, batch_size=16,
-                          oracle_metrics=False, cohort=c),
-            ),
-        ):
+        params = None
+        for mode, oracle in (("oracle", True), ("deployable", False)):
+            built = api.build(spec_for(n, oracle))
+            task, ds, sampler, cfg = (
+                built.task, built.dataset, built.sampler, built.fed_config,
+            )
+            if params is None:
+                params = task.init(jax.random.PRNGKey(0))
+            xs = (jnp.zeros((), jnp.int32), jax.random.PRNGKey(1), jax.random.PRNGKey(2))
             body = fed_server._build_round_body(task, ds, sampler, cfg, None)
             carry = (params, cfg.server_opt.init(params), sampler.init())
             us[mode] = _timeit(jax.jit(body), carry, xs, reps=10, warmup=2)
@@ -312,21 +337,30 @@ def bench_fed_cohort_width() -> None:
     stays constant in N — under the default power law s_max grows with N and
     the batch *gather* walks a multi-GB array, a simulation-harness artifact
     that would otherwise be billed to the round."""
-    from repro.core import make_sampler
-    from repro.data import synthetic_classification
-    from repro.fed import FedConfig, mlp_classifier
+    from repro import api
     from repro.fed import server as fed_server
 
     k, c = 10, 20
-    task = mlp_classifier(dim=60, n_classes=10, hidden=128, depth=2)
     entries = []
     for n in (64, 256, 1024):
-        ds = synthetic_classification(n_clients=n, total=40 * n, power=0.0, seed=0)
-        sampler = make_sampler("kvib", n=n, budget=k, horizon=100)
+        spec = api.ExperimentSpec(
+            task=api.TaskSpec(
+                name="mlp",
+                kwargs=dict(dim=60, n_classes=10, hidden=128, depth=2),
+                dataset="synthetic_classification",
+                dataset_kwargs=dict(n_clients=n, total=40 * n, power=0.0, seed=0),
+            ),
+            sampler=api.SamplerSpec(name="kvib", kwargs=dict(horizon=100)),
+            federation=api.FederationSpec(
+                budget=k, local_steps=1, batch_size=16, cohort=c,
+            ),
+            execution=api.ExecutionSpec(oracle_metrics=False),
+        )
+        built = api.build(spec)
+        task, ds, sampler = built.task, built.dataset, built.sampler
+        base = built.fed_config
         params = task.init(jax.random.PRNGKey(0))
         xs = (jnp.zeros((), jnp.int32), jax.random.PRNGKey(1), jax.random.PRNGKey(2))
-        base = FedConfig(budget=k, local_steps=1, batch_size=16,
-                         oracle_metrics=False, cohort=c)
         entry = {"n": n, "budget": k, "cohort": c}
         for mode, cfg in (
             ("cohort_width", base),

@@ -4,16 +4,15 @@ Theorem 5.2 predicts K-Vib's regret shrinks as K^{-4/3} (linear speed-up in
 budget) while the RSP baselines' bounds do not improve with K.
 
     PYTHONPATH=src python examples/budget_sweep.py [--out results/budget.json]
+
+The sweep grid is (sampler x budget) — one ``repro.api.ExperimentSpec`` per
+cell, differing only in the ``federation.budget`` field.
 """
 import argparse
 import json
 import os
 
-import numpy as np
-
-from repro.core import make_sampler
-from repro.data import synthetic_classification
-from repro.fed import FedConfig, logistic_regression, run_federated
+from repro import api
 
 
 def main() -> None:
@@ -30,21 +29,29 @@ def main() -> None:
     ap.add_argument("--out", default="results/budget.json")
     args = ap.parse_args()
 
-    ds = synthetic_classification(
-        n_clients=args.clients, total=200 * args.clients, power=2.0, seed=0
-    )
-    task = logistic_regression()
     results = {"config": vars(args), "regret_per_round": {}}
     for name in args.samplers:
         for k in args.budgets:
-            cfg = FedConfig(
-                rounds=args.rounds, budget=k, local_steps=1,
-                batch_size=64, local_lr=0.02, seed=0,
-                compiled=not args.python_loop,
+            spec = api.ExperimentSpec(
+                task=api.TaskSpec(
+                    name="logreg",
+                    dataset="synthetic_classification",
+                    dataset_kwargs=dict(
+                        n_clients=args.clients, total=200 * args.clients,
+                        power=2.0, seed=0,
+                    ),
+                ),
+                sampler=api.SamplerSpec(
+                    name=name,
+                    kwargs={"horizon": args.rounds} if name in ("kvib", "vrb") else {},
+                ),
+                federation=api.FederationSpec(
+                    rounds=args.rounds, budget=k, local_steps=1,
+                    batch_size=64, local_lr=0.02,
+                ),
+                execution=api.ExecutionSpec(seed=0, compiled=not args.python_loop),
             )
-            kw = {"horizon": args.rounds} if name in ("kvib", "vrb") else {}
-            sampler = make_sampler(name, n=ds.n_clients, budget=k, **kw)
-            hist = run_federated(task, ds, sampler, cfg)
+            hist = api.run(spec)
             rpt = float(hist.regret.dynamic_regret()[-1] / args.rounds)
             results["regret_per_round"].setdefault(name, {})[str(k)] = rpt
             print(f"{name:<8} K={k:>3} regret/T = {rpt:.4f}")

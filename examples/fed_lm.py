@@ -7,17 +7,16 @@ driver trains a reduced smollm-360m from the architecture zoo through the
 same federated stack (the end-to-end path used by launch/train.py).
 
     PYTHONPATH=src python examples/fed_lm.py [--out results/fed_lm.json]
+
+Both model choices are spec-driven: the tiny LM is the built-in ``tiny_lm``
+task, and the zoo-backed variant registers a custom Task factory
+(``api.register_task``) so it too is just a name in the spec.
 """
 import argparse
 import json
 import os
 
-import jax
-import numpy as np
-
-from repro.core import make_sampler
-from repro.data import synthetic_tokens
-from repro.fed import FedConfig, run_federated, tiny_lm
+from repro import api
 from repro.fed.tasks import Task
 
 
@@ -43,6 +42,9 @@ def zoo_lm_task(vocab: int):
     return Task("smollm-reduced", init, loss, accuracy)
 
 
+api.register_task("smollm_reduced_lm", zoo_lm_task)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=50)
@@ -55,20 +57,30 @@ def main() -> None:
     ap.add_argument("--out", default="results/fed_lm.json")
     args = ap.parse_args()
 
-    ds = synthetic_tokens(
-        n_clients=args.clients, seq_len=args.seq, vocab=args.vocab,
-        total_seqs=60 * args.clients, power=2.2, seed=0,
-    )
-    task = tiny_lm(vocab=args.vocab) if args.model == "tiny" else zoo_lm_task(args.vocab)
-    cfg = FedConfig(
-        rounds=args.rounds, budget=args.budget, local_steps=1,
-        batch_size=8, local_lr=0.3 if args.model == "tiny" else 0.1, seed=0,
-    )
+    task_name = "tiny_lm" if args.model == "tiny" else "smollm_reduced_lm"
     results = {"config": vars(args), "runs": {}}
     for name in args.samplers:
-        kw = {"horizon": args.rounds} if name in ("kvib", "vrb") else {}
-        sampler = make_sampler(name, n=ds.n_clients, budget=args.budget, **kw)
-        hist = run_federated(task, ds, sampler, cfg)
+        spec = api.ExperimentSpec(
+            task=api.TaskSpec(
+                name=task_name,
+                kwargs=dict(vocab=args.vocab),
+                dataset="synthetic_tokens",
+                dataset_kwargs=dict(
+                    n_clients=args.clients, seq_len=args.seq, vocab=args.vocab,
+                    total_seqs=60 * args.clients, power=2.2, seed=0,
+                ),
+            ),
+            sampler=api.SamplerSpec(
+                name=name,
+                kwargs={"horizon": args.rounds} if name in ("kvib", "vrb") else {},
+            ),
+            federation=api.FederationSpec(
+                rounds=args.rounds, budget=args.budget, local_steps=1,
+                batch_size=8, local_lr=0.3 if args.model == "tiny" else 0.1,
+            ),
+            execution=api.ExecutionSpec(seed=0),
+        )
+        hist = api.run(spec)
         results["runs"][name] = {
             "loss": [float(x) for x in hist.train_loss],
             "regret": [float(x) for x in hist.regret.dynamic_regret()],

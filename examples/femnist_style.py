@@ -9,6 +9,11 @@ scale.  The measured quantity — convergence speed-up of K-Vib vs baselines
 under decreasing data variance — is the paper's claim under test.
 
     PYTHONPATH=src python examples/femnist_style.py [--out results/femnist.json]
+
+The custom data generator registers itself into the spec-level dataset
+registry (``api.register_dataset``), so each (level, sampler) cell is an
+ordinary ``ExperimentSpec`` whose ``dataset="vision_like"`` — custom
+scenarios ride the same declarative front door as the built-ins.
 """
 import argparse
 import json
@@ -18,9 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import make_sampler
+from repro import api
 from repro.data import FederatedDataset, power_law_sizes, size_share
-from repro.fed import FedConfig, mlp_classifier, run_federated
 
 # (n_clients, power-law alpha) per unbalance level; alpha tuned to the
 # paper's share statistics at these client counts.
@@ -54,6 +58,9 @@ def make_vision_like(n_clients: int, alpha: float, seed: int) -> FederatedDatase
     return FederatedDataset(jnp.asarray(feats), jnp.asarray(labels), jnp.asarray(sizes))
 
 
+api.register_dataset("vision_like", make_vision_like)
+
+
 def rounds_to_accuracy(acc_curve, eval_every, target):
     for i, a in enumerate(acc_curve):
         if a >= target:
@@ -69,25 +76,47 @@ def main() -> None:
     ap.add_argument("--out", default="results/femnist.json")
     args = ap.parse_args()
 
-    task = mlp_classifier(DIM, N_CLASSES, hidden=128, depth=2)
     results = {"config": vars(args), "levels": {}}
-    for level, spec in LEVELS.items():
-        ds = make_vision_like(spec["n_clients"], spec["alpha"], seed=0)
-        share = size_share(np.asarray(ds.sizes), spec["share_frac"])
-        budget = max(5, int(0.05 * spec["n_clients"]))
-        print(f"--- {level}: N={spec['n_clients']} top-{int(spec['share_frac']*100)}% hold {share:.0%}, K={budget}")
+    for level, level_cfg in LEVELS.items():
+        budget = max(5, int(0.05 * level_cfg["n_clients"]))
+
+        def spec_for(name: str) -> api.ExperimentSpec:
+            return api.ExperimentSpec(
+                task=api.TaskSpec(
+                    name="mlp",
+                    kwargs=dict(dim=DIM, n_classes=N_CLASSES, hidden=128, depth=2),
+                    dataset="vision_like",
+                    dataset_kwargs=dict(
+                        n_clients=level_cfg["n_clients"],
+                        alpha=level_cfg["alpha"], seed=0,
+                    ),
+                ),
+                sampler=api.SamplerSpec(
+                    name=name,
+                    kwargs={"horizon": args.rounds} if name in ("kvib", "vrb") else {},
+                ),
+                federation=api.FederationSpec(
+                    rounds=args.rounds, budget=budget, local_steps=3,
+                    batch_size=20, local_lr=0.02, eval_every=5,
+                ),
+                execution=api.ExecutionSpec(seed=0),
+            )
+
+        first = api.build(spec_for(args.samplers[0]))
+        ds = first.dataset
+        share = size_share(np.asarray(ds.sizes), level_cfg["share_frac"])
+        print(f"--- {level}: N={level_cfg['n_clients']} "
+              f"top-{int(level_cfg['share_frac']*100)}% hold {share:.0%}, K={budget}")
         ev = ds.batch_all_clients(jax.random.PRNGKey(7), 8)
         ev = (ev[0].reshape(-1, DIM), ev[1].reshape(-1))
-        cfg = FedConfig(
-            rounds=args.rounds, budget=budget, local_steps=3,
-            batch_size=20, local_lr=0.02, seed=0, eval_every=5,
-        )
         lv = {"share": share, "budget": budget, "samplers": {}}
         for name in args.samplers:
-            kw = {"horizon": args.rounds} if name in ("kvib", "vrb") else {}
-            sampler = make_sampler(name, n=ds.n_clients, budget=budget, **kw)
-            hist = run_federated(task, ds, sampler, cfg, eval_data=ev)
-            tta = rounds_to_accuracy(hist.test_accuracy, cfg.eval_every, args.target_acc)
+            spec = spec_for(name)
+            built = first if name == args.samplers[0] else api.build(spec)
+            hist = api.run(spec, eval_data=ev, built=built)
+            tta = rounds_to_accuracy(
+                hist.test_accuracy, spec.federation.eval_every, args.target_acc
+            )
             lv["samplers"][name] = {
                 "loss": [float(x) for x in hist.train_loss],
                 "acc": [float(x) for x in hist.test_accuracy],

@@ -5,15 +5,16 @@
 Trains the paper's Section 6.1 synthetic task for 100 rounds with budget
 K = 10% of clients, comparing K-Vib against uniform ISP sampling, and prints
 the convergence + variance summary.
+
+Each run is one declarative ``repro.api.ExperimentSpec``: swap the sampler
+section for a new scenario, or ``spec.save("exp.json")`` and hand the JSON
+to any other spec consumer (``repro.api.run``, ``--spec`` tooling).
 """
 import argparse
 
 import jax
-import numpy as np
 
-from repro.core import make_sampler
-from repro.data import synthetic_classification
-from repro.fed import FedConfig, logistic_regression, run_federated
+from repro import api
 
 
 def main() -> None:
@@ -29,31 +30,36 @@ def main() -> None:
     )
     args = ap.parse_args()
 
-    ds = synthetic_classification(
-        n_clients=args.clients, total=200 * args.clients, power=2.0, seed=args.seed
-    )
-    task = logistic_regression()
-    cfg = FedConfig(
-        rounds=args.rounds,
-        budget=args.budget,
-        local_steps=2,
-        batch_size=64,
-        local_lr=0.02,
-        seed=args.seed,
-        compiled=not args.python_loop,
-    )
-    ev = ds.batch_all_clients(jax.random.PRNGKey(999), 8)
-    ev = (ev[0].reshape(-1, ev[0].shape[-1]), ev[1].reshape(-1))
+    def spec_for(sampler: str) -> api.ExperimentSpec:
+        return api.ExperimentSpec(
+            task=api.TaskSpec(
+                name="logreg",
+                dataset="synthetic_classification",
+                dataset_kwargs=dict(
+                    n_clients=args.clients, total=200 * args.clients,
+                    power=2.0, seed=args.seed,
+                ),
+            ),
+            sampler=api.SamplerSpec(
+                name=sampler,
+                kwargs={"horizon": args.rounds} if sampler == "kvib" else {},
+            ),
+            federation=api.FederationSpec(
+                rounds=args.rounds, budget=args.budget, local_steps=2,
+                batch_size=64, local_lr=0.02,
+            ),
+            execution=api.ExecutionSpec(
+                seed=args.seed, compiled=not args.python_loop,
+            ),
+        )
 
     print(f"{'sampler':<14} {'loss':>8} {'acc':>7} {'est.err':>10} {'regret/T':>10} {'s':>6}")
     for name in ("uniform_isp", "kvib"):
-        sampler = make_sampler(
-            name,
-            n=ds.n_clients,
-            budget=cfg.budget,
-            **({"horizon": cfg.rounds} if name == "kvib" else {}),
-        )
-        hist = run_federated(task, ds, sampler, cfg, eval_data=ev)
+        spec = spec_for(name)
+        built = api.build(spec)
+        ev = built.dataset.batch_all_clients(jax.random.PRNGKey(999), 8)
+        ev = (ev[0].reshape(-1, ev[0].shape[-1]), ev[1].reshape(-1))
+        hist = api.run(spec, eval_data=ev, built=built)
         s = hist.summary()
         print(
             f"{name:<14} {s['final_loss']:>8.4f} {s['final_acc']:>7.3f} "

@@ -4,6 +4,9 @@ gamma-sensitivity sweep.
 
     PYTHONPATH=src python examples/synthetic_regret.py [--rounds 300] \
         [--gamma-sweep] [--out results/synthetic.json]
+
+Every (sampler, seed) cell is one ``repro.api.ExperimentSpec`` — the sweep
+is spec construction, and ``repro.api.run`` executes each cell.
 """
 import argparse
 import json
@@ -12,17 +15,33 @@ import os
 import jax
 import numpy as np
 
-from repro.core import make_sampler
-from repro.data import synthetic_classification
-from repro.fed import FedConfig, logistic_regression, run_federated
+from repro import api
 
 SAMPLERS = ["uniform_rsp", "uniform_isp", "mabs", "vrb", "avare", "kvib"]
 
 
-def run_one(name, ds, cfg, ev, **sampler_kw):
-    sampler = make_sampler(name, n=ds.n_clients, budget=cfg.budget, **sampler_kw)
-    hist = run_federated(logistic_regression(), ds, sampler, cfg, eval_data=ev)
-    return {
+def make_spec(args, name, seed, compiled, **sampler_kw) -> api.ExperimentSpec:
+    return api.ExperimentSpec(
+        task=api.TaskSpec(
+            name="logreg",
+            dataset="synthetic_classification",
+            dataset_kwargs=dict(
+                n_clients=args.clients, total=200 * args.clients,
+                power=2.0, seed=seed,
+            ),
+        ),
+        sampler=api.SamplerSpec(name=name, kwargs=sampler_kw),
+        federation=api.FederationSpec(
+            rounds=args.rounds, budget=args.budget, local_steps=1,
+            batch_size=64, local_lr=0.02,
+        ),
+        execution=api.ExecutionSpec(seed=seed, compiled=compiled),
+    )
+
+
+def run_one(spec, ev):
+    hist = api.run(spec, eval_data=ev)
+    out = {
         "loss": [float(x) for x in hist.train_loss],
         "acc": [float(x) for x in hist.test_accuracy],
         "regret": [float(x) for x in hist.regret.dynamic_regret()],
@@ -30,6 +49,7 @@ def run_one(name, ds, cfg, ev, **sampler_kw):
         "cohort": [int(x) for x in hist.cohort_size],
         "wall_s": hist.wall_time_s,
     }
+    return out
 
 
 def main() -> None:
@@ -50,18 +70,15 @@ def main() -> None:
 
     results = {"config": vars(args), "runs": {}}
     for seed in range(args.seeds):
-        ds = synthetic_classification(
-            n_clients=args.clients, total=200 * args.clients, power=2.0, seed=seed
-        )
-        ev = ds.batch_all_clients(jax.random.PRNGKey(999), 8)
-        ev = (ev[0].reshape(-1, ev[0].shape[-1]), ev[1].reshape(-1))
-        cfg = FedConfig(
-            rounds=args.rounds, budget=args.budget, local_steps=1,
-            batch_size=64, local_lr=0.02, seed=seed, compiled=compiled,
-        )
+        ev = None
         for name in SAMPLERS:
             kw = {"horizon": args.rounds} if name in ("kvib", "vrb") else {}
-            r = run_one(name, ds, cfg, ev, **kw)
+            spec = make_spec(args, name, seed, compiled, **kw)
+            if ev is None:
+                ds = api.build(spec).dataset
+                ev = ds.batch_all_clients(jax.random.PRNGKey(999), 8)
+                ev = (ev[0].reshape(-1, ev[0].shape[-1]), ev[1].reshape(-1))
+            r = run_one(spec, ev)
             results["runs"].setdefault(name, []).append(r)
             print(
                 f"seed {seed} {name:<12} regret/T={r['regret'][-1]/args.rounds:9.4f} "
@@ -70,19 +87,15 @@ def main() -> None:
             )
 
     if args.gamma_sweep:
-        ds = synthetic_classification(
-            n_clients=args.clients, total=200 * args.clients, power=2.0, seed=0
-        )
-        cfg = FedConfig(
-            rounds=args.rounds, budget=args.budget, local_steps=1,
-            batch_size=64, local_lr=0.02, seed=0, compiled=compiled,
-        )
         for gamma in (1e-4, 1e-3, 1e-2, 1e-1, 1.0):
-            r = run_one("kvib", ds, cfg, None, horizon=args.rounds, gamma=gamma)
+            spec = make_spec(args, "kvib", 0, compiled, horizon=args.rounds, gamma=gamma)
+            hist = api.run(spec)
+            reg = float(hist.regret.dynamic_regret()[-1])
+            err = float(np.mean(hist.estimator_sq_error))
             results["runs"].setdefault("kvib_gamma", []).append(
-                {"gamma": gamma, "regret": r["regret"][-1], "sq_error": float(np.mean(r["sq_error"]))}
+                {"gamma": gamma, "regret": reg, "sq_error": err}
             )
-            print(f"gamma={gamma:g} regret={r['regret'][-1]:.2f} err={np.mean(r['sq_error']):.5f}")
+            print(f"gamma={gamma:g} regret={reg:.2f} err={err:.5f}")
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:

@@ -1,0 +1,39 @@
+"""Reproduction of "Enhanced Federated Optimization: Adaptive Unbiased
+Client Sampling with Reduced Variance".
+
+The declarative experiment API is re-exported lazily at the top level::
+
+    from repro import ExperimentSpec, run
+
+Lazy (PEP 562) so that ``import repro`` stays side-effect-free: entry points
+that must configure the environment before jax initializes (notably
+``python -m repro.launch.dryrun`` and its XLA_FLAGS device-count override)
+import through this package without dragging jax in early.
+"""
+_API_EXPORTS = (
+    "ExperimentSpec",
+    "TaskSpec",
+    "SamplerSpec",
+    "FederationSpec",
+    "ExecutionSpec",
+    "BuiltExperiment",
+    "build",
+    "run",
+    "restore_template",
+    "register_task",
+    "register_dataset",
+)
+
+__all__ = list(_API_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _API_EXPORTS:
+        from repro import api
+
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_API_EXPORTS))

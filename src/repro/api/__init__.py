@@ -1,0 +1,52 @@
+"""Declarative experiment API: one ``ExperimentSpec``, one ``run``.
+
+The canonical front door for every scenario this repo can execute::
+
+    from repro.api import ExperimentSpec, TaskSpec, SamplerSpec, run
+
+    spec = ExperimentSpec(
+        task=TaskSpec(name="logreg", dataset="synthetic_classification",
+                      dataset_kwargs={"n_clients": 100, "total": 20000}),
+        sampler=SamplerSpec(name="kvib", kwargs={"horizon": 200}),
+    )
+    history = run(spec)
+
+    spec.save("experiment.json")          # lossless JSON round trip
+    spec2 = ExperimentSpec.load("experiment.json")
+    assert spec2 == spec
+
+The same spec drives the CLI (``python -m repro.launch.train --spec
+experiment.json`` / ``--dump-spec``), the checkpoint manifest fingerprint
+(``repro.checkpoint.config_fingerprint(spec.to_dict())``), the examples, and
+the benchmarks — "new scenario = new spec JSON".
+"""
+from repro.api.runner import BuiltExperiment, build, restore_template, run
+from repro.api.spec import (
+    ExecutionSpec,
+    ExperimentSpec,
+    FederationSpec,
+    SamplerSpec,
+    TaskSpec,
+    dataset_names,
+    register_dataset,
+    register_task,
+    server_opt_names,
+    task_names,
+)
+
+__all__ = [
+    "ExperimentSpec",
+    "TaskSpec",
+    "SamplerSpec",
+    "FederationSpec",
+    "ExecutionSpec",
+    "BuiltExperiment",
+    "build",
+    "run",
+    "restore_template",
+    "register_task",
+    "register_dataset",
+    "task_names",
+    "dataset_names",
+    "server_opt_names",
+]

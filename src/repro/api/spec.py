@@ -1,0 +1,421 @@
+"""The declarative experiment description: ``ExperimentSpec``.
+
+One frozen, nested pytree-of-dataclasses describes a complete experiment —
+*what* to train (``TaskSpec``), *how* to sample clients (``SamplerSpec``),
+the federated-optimization hyperparameters (``FederationSpec``), and the
+execution strategy (``ExecutionSpec``).  The spec is the single source of
+truth consumed by every front door in the repo:
+
+* ``repro.api.run(spec)`` dispatches to the simulation stack
+  (``fed.server.run_federated``) or the pod-scale compiled stack
+  (``fed.round.build_fed_scan_segment`` + ``fed.state.run_segmented``);
+* ``repro.launch.train`` parses its CLI flags *into* a spec (``--dump-spec``
+  prints it, ``--spec file.json`` loads one directly);
+* ``repro.checkpoint.config_fingerprint(spec.to_dict())`` is the manifest
+  compatibility guard — ANY field change yields a different fingerprint;
+* the examples and ``benchmarks/run.py`` construct specs instead of raw
+  ``FedConfig`` / ``RoundSpec`` tuples.
+
+Serialization contract
+----------------------
+
+``to_dict()`` / ``from_dict()`` are lossless and JSON-stable:
+
+* ``spec -> to_dict() -> json -> from_dict()`` is the identity (tuples are
+  normalized at construction so the JSON list round trip cannot introduce
+  drift);
+* unknown keys are REJECTED with an error naming the bad field and its
+  section — a typo'd hyperparameter can never be silently ignored;
+* free-form ``kwargs`` mappings (task factory, sampler, server optimizer)
+  pass through verbatim, so registry-resolved components stay extensible
+  without schema churn.
+
+The spec layer *builds* the same objects the legacy entry points take —
+``api.run(spec)`` reproduces ``run_federated(task, dataset, sampler, cfg)``
+bitwise (tests/test_api_spec.py golden tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Mapping
+
+from repro.fed.server import FedConfig
+from repro.optim.fedopt import FedAdam, FedAvgServer, ServerOptimizer
+
+__all__ = [
+    "TaskSpec",
+    "SamplerSpec",
+    "FederationSpec",
+    "ExecutionSpec",
+    "ExperimentSpec",
+    "register_task",
+    "register_dataset",
+    "task_names",
+    "dataset_names",
+    "server_opt_names",
+]
+
+
+# ---------------------------------------------------------------------------
+# Component registries: name -> factory.  The built-in entries cover the
+# paper experiments; ``register_task`` / ``register_dataset`` let drivers add
+# scenario-specific factories (examples/femnist_style.py registers its
+# vision-like generator, examples/fed_lm.py its zoo-backed LM task) while
+# keeping the spec itself a plain name + kwargs record.
+# ---------------------------------------------------------------------------
+
+
+def _builtin_tasks() -> dict:
+    from repro.fed import tasks
+
+    return {
+        "logreg": tasks.logistic_regression,
+        "mlp": tasks.mlp_classifier,
+        "tiny_lm": tasks.tiny_lm,
+    }
+
+
+def _builtin_datasets() -> dict:
+    from repro.data import synthetic_classification, synthetic_tokens
+
+    return {
+        "synthetic_classification": synthetic_classification,
+        "synthetic_tokens": synthetic_tokens,
+    }
+
+
+_TASKS: dict = {}
+_DATASETS: dict = {}
+_SERVER_OPTS: dict[str, type[ServerOptimizer]] = {
+    "fedavg": FedAvgServer,
+    "fedadam": FedAdam,
+}
+
+
+def _task_registry() -> dict:
+    if not _TASKS:
+        _TASKS.update(_builtin_tasks())
+    return _TASKS
+
+
+def _dataset_registry() -> dict:
+    if not _DATASETS:
+        _DATASETS.update(_builtin_datasets())
+    return _DATASETS
+
+
+def register_task(name: str, factory) -> None:
+    """Register a ``Task`` factory under ``name`` for ``TaskSpec.name``.
+
+    The factory is called with ``TaskSpec.kwargs``.  Registration is additive
+    process state: a spec referencing a custom name deserializes fine but can
+    only be *built* in a process that registered the factory."""
+    _task_registry()[str(name)] = factory
+
+
+def register_dataset(name: str, factory) -> None:
+    """Register a dataset factory under ``name`` for ``TaskSpec.dataset``.
+
+    Factories must be deterministic pure functions of their kwargs (seed
+    included in the kwargs): the build layer memoizes construction per
+    process, so sweeps that re-reference the same (dataset, kwargs) cell —
+    a budget grid, a sampler panel — share one materialized dataset."""
+    _dataset_registry()[str(name)] = factory
+
+
+def task_names() -> list[str]:
+    return sorted(_task_registry())
+
+
+def dataset_names() -> list[str]:
+    return sorted(_dataset_registry())
+
+
+def server_opt_names() -> list[str]:
+    return sorted(_SERVER_OPTS)
+
+
+# ---------------------------------------------------------------------------
+# Normalization helpers: JSON has no tuples, so every sequence inside a spec
+# is normalized to a tuple (and every mapping to a plain dict) at
+# construction time — ``from_dict(json.loads(to_json()))`` is then the
+# identity, not merely an approximation.
+# ---------------------------------------------------------------------------
+
+
+def _normalize(value):
+    if isinstance(value, Mapping):
+        return {str(k): _normalize(v) for k, v in value.items()}
+    if isinstance(value, (list, tuple)):
+        return tuple(_normalize(v) for v in value)
+    return value
+
+
+def _jsonable(value):
+    """The inverse direction: tuples -> lists for JSON emission."""
+    if isinstance(value, Mapping):
+        return {k: _jsonable(v) for k, v in value.items()}
+    if isinstance(value, tuple):
+        return [_jsonable(v) for v in value]
+    return value
+
+
+def _from_section(cls, section: str, data: Any):
+    """Instantiate a spec dataclass from a dict, rejecting unknown keys with
+    an error that names the bad field and where it was found."""
+    if not isinstance(data, Mapping):
+        raise ValueError(
+            f"spec section {section!r} must be a mapping, got {type(data).__name__}"
+        )
+    fields = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(data) - fields)
+    if unknown:
+        raise ValueError(
+            f"unknown field {unknown[0]!r} in spec section {section!r} "
+            f"(valid fields: {sorted(fields)})"
+        )
+    return cls(**dict(data))
+
+
+# ---------------------------------------------------------------------------
+# The spec dataclasses
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskSpec:
+    """What to train and on which federated data.
+
+    kind:
+        ``"task"`` — a simulation-scale ``repro.fed.tasks.Task`` resolved
+        from the task registry (``name`` + ``kwargs``); runs through
+        ``fed.server.run_federated``.
+        ``"zoo"`` — an architecture from ``repro.configs`` (``name`` is the
+        registry arch name, ``reduced``/``kwargs`` configure
+        ``ArchConfig.reduced(**kwargs)``); runs through the pod-scale
+        compiled stack (``fed.round.build_fed_scan_segment``).
+    dataset / dataset_kwargs:
+        Dataset factory name (dataset registry) and its kwargs.  For zoo
+        archs, ``vocab``, ``seed``, and ``total_seqs`` default from the arch
+        config and execution seed at build time when omitted.
+    """
+
+    kind: str = "task"  # "task" | "zoo"
+    name: str = "logreg"
+    kwargs: dict = dataclasses.field(default_factory=dict)
+    reduced: bool = False  # zoo only: start from ArchConfig.reduced()
+    dataset: str = "synthetic_classification"
+    dataset_kwargs: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.kind not in ("task", "zoo"):
+            raise ValueError(
+                f"TaskSpec.kind must be 'task' or 'zoo', got {self.kind!r}"
+            )
+        if self.kind == "task" and self.reduced:
+            raise ValueError(
+                "TaskSpec.reduced applies only to kind='zoo' (it selects "
+                "ArchConfig.reduced()); it has no effect on a simulation task "
+                "and would only perturb the config fingerprint"
+            )
+        if self.kind == "zoo" and self.kwargs and not self.reduced:
+            raise ValueError(
+                "TaskSpec.kwargs for kind='zoo' are ArchConfig.reduced() "
+                "overrides and require reduced=True; a full-size arch takes "
+                "no construction kwargs"
+            )
+        object.__setattr__(self, "kwargs", _normalize(self.kwargs))
+        object.__setattr__(self, "dataset_kwargs", _normalize(self.dataset_kwargs))
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerSpec:
+    """Client sampler: a ``repro.core.make_sampler`` registry name + kwargs.
+
+    ``n`` and ``budget`` are NOT spec fields — they derive from the built
+    dataset and ``FederationSpec.budget`` so the three sections cannot
+    disagree about the client population."""
+
+    name: str = "kvib"
+    kwargs: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        object.__setattr__(self, "kwargs", _normalize(self.kwargs))
+
+
+@dataclasses.dataclass(frozen=True)
+class FederationSpec:
+    """Algorithm 1's federated-optimization hyperparameters.
+
+    ``batch_size`` is the per-client local batch (``FedConfig.batch_size`` on
+    the simulation stack, ``RoundSpec.local_batch`` on the pod-scale stack);
+    ``cohort=None`` means the deployable cohort buffer defaults to
+    ``min(2 * budget, n_clients)`` on either stack."""
+
+    rounds: int = 100
+    budget: int = 10
+    cohort: int | None = None
+    local_steps: int = 1
+    batch_size: int = 64
+    local_lr: float = 0.02
+    server_opt: str = "fedavg"
+    server_opt_kwargs: dict = dataclasses.field(default_factory=dict)
+    eval_every: int = 5
+    eval_batches: int = 4
+
+    def __post_init__(self):
+        if self.server_opt not in _SERVER_OPTS:
+            raise ValueError(
+                f"unknown server_opt {self.server_opt!r}; "
+                f"options: {server_opt_names()}"
+            )
+        object.__setattr__(
+            self, "server_opt_kwargs", _normalize(self.server_opt_kwargs)
+        )
+
+    def build_server_opt(self) -> ServerOptimizer:
+        return _SERVER_OPTS[self.server_opt](**dict(self.server_opt_kwargs))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionSpec:
+    """How (not what) to execute: seeds, compilation, fidelity, checkpoints.
+
+    ``mesh_shape`` (zoo stack only): explicit host-mesh shape, e.g.
+    ``(2, 1)`` for 2-way data parallelism; ``None`` uses
+    ``repro.launch.mesh.make_host_mesh()``'s device-derived default."""
+
+    seed: int = 0
+    compiled: bool = True
+    oracle_metrics: bool = True
+    exact_oracle_equiv: bool = False
+    track_scores: bool = True
+    ckpt_every: int = 0
+    mesh_shape: tuple | None = None
+
+    def __post_init__(self):
+        if self.mesh_shape is not None:
+            object.__setattr__(
+                self, "mesh_shape", tuple(int(x) for x in self.mesh_shape)
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """The canonical, serializable description of one experiment.
+
+    ``repro.api.run(spec)`` executes it; ``to_dict()``'s canonical form is
+    what checkpoint manifests fingerprint and what ``--dump-spec`` emits."""
+
+    task: TaskSpec = dataclasses.field(default_factory=TaskSpec)
+    sampler: SamplerSpec = dataclasses.field(default_factory=SamplerSpec)
+    federation: FederationSpec = dataclasses.field(default_factory=FederationSpec)
+    execution: ExecutionSpec = dataclasses.field(default_factory=ExecutionSpec)
+
+    # -- serialization -------------------------------------------------------
+    def to_dict(self) -> dict:
+        """Lossless plain-dict form (JSON-ready: tuples become lists)."""
+        return _jsonable(
+            {
+                "task": dataclasses.asdict(self.task),
+                "sampler": dataclasses.asdict(self.sampler),
+                "federation": dataclasses.asdict(self.federation),
+                "execution": dataclasses.asdict(self.execution),
+            }
+        )
+
+    @classmethod
+    def from_dict(cls, data: Mapping) -> "ExperimentSpec":
+        """Inverse of ``to_dict``; unknown keys raise, naming the field."""
+        if not isinstance(data, Mapping):
+            raise ValueError(
+                f"ExperimentSpec.from_dict needs a mapping, got {type(data).__name__}"
+            )
+        sections = {
+            "task": TaskSpec,
+            "sampler": SamplerSpec,
+            "federation": FederationSpec,
+            "execution": ExecutionSpec,
+        }
+        unknown = sorted(set(data) - set(sections))
+        if unknown:
+            raise ValueError(
+                f"unknown field {unknown[0]!r} in ExperimentSpec "
+                f"(valid sections: {sorted(sections)})"
+            )
+        built = {
+            key: _from_section(sec_cls, key, data[key])
+            for key, sec_cls in sections.items()
+            if key in data
+        }
+        return cls(**built)
+
+    def to_json(self, indent: int | None = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(text))
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "ExperimentSpec":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    # -- legacy-config projections ------------------------------------------
+    def fed_config(self) -> FedConfig:
+        """The simulation stack's ``FedConfig`` this spec denotes — the exact
+        object the legacy ``run_federated(task, dataset, sampler, cfg)`` call
+        would have taken (golden bit-identity depends on this mapping)."""
+        fed, ex = self.federation, self.execution
+        return FedConfig(
+            rounds=fed.rounds,
+            budget=fed.budget,
+            local_steps=fed.local_steps,
+            batch_size=fed.batch_size,
+            local_lr=fed.local_lr,
+            server_opt=fed.build_server_opt(),
+            seed=ex.seed,
+            eval_every=fed.eval_every,
+            eval_batches=fed.eval_batches,
+            oracle_metrics=ex.oracle_metrics,
+            compiled=ex.compiled,
+            cohort=fed.cohort,
+            exact_oracle_equiv=ex.exact_oracle_equiv,
+            track_scores=ex.track_scores,
+            ckpt_every=ex.ckpt_every,
+        )
+
+    def round_spec(self):
+        """The pod-scale stack's ``RoundSpec`` this spec denotes (zoo kind).
+
+        ``cohort=None`` resolves at build time (``repro.api.build``) where
+        the client count is known; here it must already be concrete."""
+        from repro.fed.round import RoundSpec
+
+        fed = self.federation
+        if fed.cohort is None:
+            raise ValueError(
+                "FederationSpec.cohort is None; resolve it against the client "
+                "count first (repro.api.build does this automatically)"
+            )
+        if fed.server_opt != "fedavg":
+            raise ValueError(
+                f"server_opt {fed.server_opt!r} is only supported on the "
+                "simulation stack (kind='task'); the pod-scale round applies "
+                "a stateless x - server_lr * d update (fedavg)"
+            )
+        server_lr = float(dict(fed.server_opt_kwargs).get("lr", 1.0))
+        return RoundSpec(
+            cohort=int(fed.cohort),
+            local_steps=fed.local_steps,
+            local_lr=fed.local_lr,
+            server_lr=server_lr,
+            local_batch=fed.batch_size,
+        )

@@ -39,11 +39,17 @@ _MANIFEST_FORMAT = 1
 def config_fingerprint(config: Any) -> str:
     """Stable short fingerprint of a run configuration.
 
-    Accepts anything JSON-serializable-ish (dataclasses are converted via
-    ``dataclasses.asdict``; unknown objects fall back to ``repr``).  Two
-    processes agreeing on the fingerprint is the manager's guard against
-    resuming a run under a silently different configuration."""
-    if dataclasses.is_dataclass(config) and not isinstance(config, type):
+    The canonical input is ``repro.api.ExperimentSpec`` (or its
+    ``to_dict()``): the spec is the one serializable description of a run,
+    so its fingerprint is the manifest's compatibility guard — ANY spec
+    field change yields a different fingerprint.  Also accepts anything
+    JSON-serializable-ish (objects with ``to_dict()`` are converted through
+    it, dataclasses via ``dataclasses.asdict``; unknown leaves fall back to
+    ``repr``).  Two processes agreeing on the fingerprint is the manager's
+    guard against resuming a run under a silently different configuration."""
+    if hasattr(config, "to_dict"):
+        config = config.to_dict()
+    elif dataclasses.is_dataclass(config) and not isinstance(config, type):
         config = dataclasses.asdict(config)
     blob = json.dumps(config, sort_keys=True, default=repr)
     return hashlib.sha256(blob.encode()).hexdigest()[:16]

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.models.common import ArchConfig
 
-__all__ = ["get_config", "list_archs", "INPUT_SHAPES", "input_specs", "step_kind", "ARCH_MODULES"]
+__all__ = ["get_config", "has_arch", "list_archs", "INPUT_SHAPES", "input_specs", "step_kind", "ARCH_MODULES"]
 
 ARCH_MODULES = {
     "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b",
@@ -48,8 +48,15 @@ INPUT_SHAPES = {
 
 
 def get_config(name: str) -> ArchConfig:
+    if name not in ARCH_MODULES:
+        raise ValueError(f"unknown arch {name!r}; options: {list_archs()}")
     mod = importlib.import_module(ARCH_MODULES[name])
     return mod.CONFIG
+
+
+def has_arch(name: str) -> bool:
+    """Whether ``name`` is a registered zoo architecture (spec validation)."""
+    return name in ARCH_MODULES
 
 
 def list_archs() -> list[str]:

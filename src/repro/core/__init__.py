@@ -23,6 +23,7 @@ from repro.core.samplers import (
     UniformRSP,
     Vrb,
     make_sampler,
+    sampler_names,
 )
 from repro.core.solver import isp_probabilities, mix_probabilities, rsp_probabilities
 
@@ -46,6 +47,7 @@ __all__ = [
     "UniformRSP",
     "Vrb",
     "make_sampler",
+    "sampler_names",
     "assert_serializable_state",
     "isp_probabilities",
     "mix_probabilities",

@@ -70,6 +70,7 @@ __all__ = [
     "Osmd",
     "ClusteredKVib",
     "make_sampler",
+    "sampler_names",
     "assert_serializable_state",
 ]
 
@@ -540,3 +541,9 @@ def make_sampler(name: str, n: int, budget: int, **kw) -> Sampler:
     except KeyError as e:
         raise ValueError(f"unknown sampler {name!r}; options: {sorted(_REGISTRY)}") from e
     return cls(n=n, budget=budget, **kw)
+
+
+def sampler_names() -> list[str]:
+    """Registry names accepted by ``make_sampler`` (and by
+    ``repro.api.SamplerSpec.name`` / the launcher's ``--sampler`` flag)."""
+    return sorted(_REGISTRY)

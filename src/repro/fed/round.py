@@ -22,6 +22,11 @@ mask folded into w (w_c = 0 for padding) — ISP's stochastic |S^t| maps onto
 fixed TPU shapes this way.  Selection/padding/weight semantics live in
 ``repro.fed.cohort`` (the shared contract with the compiled server loop and
 the launcher); this module is the device-side consumer of that contract.
+
+``RoundSpec`` is this stack's low-level knob set; the canonical experiment
+description is ``repro.api.ExperimentSpec``, whose zoo dispatch
+(``repro.api.run`` / ``repro.launch.train``) projects its ``FederationSpec``
+onto a ``RoundSpec`` and drives ``build_fed_scan_segment``.
 """
 from __future__ import annotations
 

@@ -1,5 +1,12 @@
 """Federated server loop (Algorithm 1) — simulation-scale driver.
 
+The canonical way to describe and launch a run is the declarative
+``repro.api.ExperimentSpec`` (``repro.api.run(spec)`` dispatches here for
+simulation tasks and builds the exact ``(task, dataset, sampler, FedConfig)``
+tuple ``run_federated`` takes — bitwise-identical by construction, pinned by
+tests/test_api_spec.py).  ``run_federated`` remains the stable programmatic
+entry point underneath.
+
 Two execution modes share ONE round body (``_build_round_body``):
 
 * ``compiled=True`` (default): the training run — all-clients local update,

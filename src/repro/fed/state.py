@@ -37,6 +37,12 @@ Segmentation is a pure reshaping of the horizon: for any ``ckpt_every`` the
 per-round bodies see the same carries, keys, and round indices, so results
 are bitwise identical to the monolithic scan (tests/test_segmented_scan.py
 pins this at ``ckpt_every`` in {1, 7, T}).
+
+Restore is template-shaped: build the fresh round-0 state, then refill it
+from the checkpoint.  ``repro.api.restore_template(spec)`` constructs that
+template for either stack straight from the declarative
+``repro.api.ExperimentSpec`` — the same spec whose
+``config_fingerprint(spec.to_dict())`` guards the manifest.
 """
 from __future__ import annotations
 

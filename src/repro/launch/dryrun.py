@@ -17,6 +17,11 @@ the XLA_FLAGS assignment above precedes every jax import, including the
 Usage:
   python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k [--multi-pod]
   python -m repro.launch.dryrun --all [--out results/dryrun]   # subprocess per combo
+
+Unlike the training front doors (``repro.api.run`` / ``repro.launch.train``,
+which consume a declarative ``repro.api.ExperimentSpec``), the dry-run
+deliberately sits below the spec layer: it sweeps raw (arch, shape, mesh)
+combos with abstract inputs and never builds a dataset or sampler.
 """
 import argparse
 import functools

@@ -1,0 +1,504 @@
+"""The declarative ExperimentSpec front door (repro.api).
+
+Three contracts under test:
+
+* Serialization: ``spec -> dict -> JSON -> spec`` is the identity, unknown
+  keys are rejected naming the bad field, and ``config_fingerprint`` over
+  the canonical dict is the manifest compatibility guard (equal specs agree,
+  ANY field change disagrees).
+* Golden bit-identity: ``api.run(spec)`` reproduces the legacy
+  ``run_federated(task, dataset, sampler, cfg)`` History/params bitwise for
+  ISP+RSP samplers x oracle/deployable x compiled/reference, and the zoo
+  dispatch reproduces the ``build_fed_scan_segment`` construction the
+  launcher uses.
+* CLI shim: ``launch.train``'s flags project onto the spec the old code
+  paths implied (``build_spec_from_args``), and ``--dump-spec`` emits JSON
+  that loads back to the identical spec.
+"""
+import dataclasses
+import json
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import (
+    ExecutionSpec,
+    ExperimentSpec,
+    FederationSpec,
+    SamplerSpec,
+    TaskSpec,
+)
+from repro.checkpoint import CheckpointManager, config_fingerprint
+from repro.core import make_sampler
+from repro.data import synthetic_classification
+from repro.fed import FedConfig, logistic_regression, run_federated
+
+
+def tiny_spec(**over) -> ExperimentSpec:
+    base = dict(
+        task=TaskSpec(
+            name="logreg",
+            dataset="synthetic_classification",
+            dataset_kwargs={"n_clients": 12, "total": 600, "seed": 7},
+        ),
+        sampler=SamplerSpec(name="kvib", kwargs={"horizon": 4}),
+        federation=FederationSpec(
+            rounds=4, budget=4, local_steps=1, batch_size=8, local_lr=0.05
+        ),
+        execution=ExecutionSpec(seed=11),
+    )
+    base.update(over)
+    return ExperimentSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# Serialization round trips
+# ---------------------------------------------------------------------------
+
+
+def test_spec_dict_json_roundtrip_identity():
+    spec = tiny_spec()
+    assert ExperimentSpec.from_dict(spec.to_dict()) == spec
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    # a second serialize of the deserialized spec is byte-identical
+    assert ExperimentSpec.from_json(spec.to_json()).to_json() == spec.to_json()
+
+
+def test_spec_roundtrip_normalizes_sequences():
+    """Tuples inside kwargs survive the JSON-list round trip because both
+    directions normalize to tuples — including nested ones."""
+    spec = tiny_spec(
+        sampler=SamplerSpec(
+            name="clustered_kvib",
+            kwargs={"cluster_ids": (0, 0, 1, 1, 2, 2, 0, 1, 2, 0, 1, 2), "horizon": 4},
+        ),
+        execution=ExecutionSpec(seed=11, mesh_shape=(1, 1)),
+    )
+    rt = ExperimentSpec.from_json(spec.to_json())
+    assert rt == spec
+    assert isinstance(rt.sampler.kwargs["cluster_ids"], tuple)
+    assert rt.execution.mesh_shape == (1, 1)
+    # constructing straight from lists lands on the same normal form
+    assert SamplerSpec(name="x", kwargs={"a": [1, [2, 3]]}) == SamplerSpec(
+        name="x", kwargs={"a": (1, (2, 3))}
+    )
+
+
+def test_spec_file_roundtrip(tmp_path):
+    spec = tiny_spec()
+    path = spec.save(str(tmp_path / "exp.json"))
+    assert ExperimentSpec.load(path) == spec
+
+
+@pytest.mark.parametrize(
+    "payload, needle",
+    [
+        ({"bogus_section": {}}, "bogus_section"),
+        ({"task": {"bogus_field": 1}}, "bogus_field"),
+        ({"sampler": {"nam": "kvib"}}, "nam"),
+        ({"federation": {"round": 5}}, "round"),
+        ({"execution": {"sead": 3}}, "sead"),
+    ],
+)
+def test_from_dict_rejects_unknown_keys(payload, needle):
+    with pytest.raises(ValueError, match=needle):
+        ExperimentSpec.from_dict(payload)
+
+
+def test_from_dict_rejects_non_mapping_section():
+    with pytest.raises(ValueError, match="task"):
+        ExperimentSpec.from_dict({"task": ["not", "a", "mapping"]})
+    with pytest.raises(ValueError, match="mapping"):
+        ExperimentSpec.from_dict("not a mapping")
+
+
+def test_invalid_enum_fields_raise():
+    with pytest.raises(ValueError, match="kind"):
+        TaskSpec(kind="neither")
+    with pytest.raises(ValueError, match="server_opt"):
+        FederationSpec(server_opt="sgd9000")
+
+
+def test_reduced_and_kwargs_semantics_enforced():
+    # reduced applies only to zoo archs; inert-but-fingerprint-perturbing
+    # fields are rejected at construction
+    with pytest.raises(ValueError, match="reduced"):
+        TaskSpec(kind="task", name="mlp", reduced=True)
+    # zoo kwargs are reduced() overrides, meaningless on a full-size arch
+    with pytest.raises(ValueError, match="reduced=True"):
+        TaskSpec(kind="zoo", name="smollm-360m", kwargs={"vocab": 256})
+
+
+def test_zoo_rejects_unsupported_features():
+    # non-fedavg server opt: the pod-scale round is a stateless update
+    spec = zoo_spec()
+    bad = dataclasses.replace(
+        spec,
+        federation=dataclasses.replace(
+            spec.federation, server_opt="fedadam", server_opt_kwargs={"lr": 1e-3}
+        ),
+    )
+    with pytest.raises(ValueError, match="fedavg"):
+        api.build(bad)
+    # eval_data is a simulation-stack feature; dropping it silently would
+    # hand back an empty accuracy curve
+    with pytest.raises(ValueError, match="eval_data"):
+        api.run(zoo_spec(), eval_data=(np.zeros((2, 4)), np.zeros((2,))))
+
+
+def test_dataset_builds_are_memoized_per_kwargs():
+    a = api.build(tiny_spec()).dataset
+    b = api.build(tiny_spec(sampler=SamplerSpec(name="vrb", kwargs={}))).dataset
+    assert a is b  # same (dataset, kwargs) cell -> one materialized dataset
+    other = api.build(
+        tiny_spec(
+            task=TaskSpec(
+                name="logreg", dataset="synthetic_classification",
+                dataset_kwargs={"n_clients": 12, "total": 600, "seed": 8},
+            )
+        )
+    ).dataset
+    assert other is not a
+
+
+def test_build_rejects_unknown_names():
+    with pytest.raises(ValueError, match="unknown task"):
+        api.build(tiny_spec(task=TaskSpec(name="nope")))
+    with pytest.raises(ValueError, match="unknown dataset"):
+        api.build(tiny_spec(task=TaskSpec(name="logreg", dataset="nope")))
+    with pytest.raises(ValueError, match="unknown zoo arch"):
+        api.build(tiny_spec(task=TaskSpec(kind="zoo", name="nope")))
+    with pytest.raises(ValueError, match="unknown sampler"):
+        api.build(tiny_spec(sampler=SamplerSpec(name="nope")))
+
+
+# ---------------------------------------------------------------------------
+# Fingerprint = manifest compatibility guard
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprint_equal_specs_agree_any_change_disagrees():
+    a, b = tiny_spec(), tiny_spec()
+    assert a is not b and a == b
+    assert config_fingerprint(a.to_dict()) == config_fingerprint(b.to_dict())
+    # the spec object itself is accepted (duck-typed to_dict)
+    assert config_fingerprint(a) == config_fingerprint(a.to_dict())
+
+    base = config_fingerprint(a.to_dict())
+    changed = [
+        tiny_spec(task=TaskSpec(name="logreg", dataset="synthetic_classification",
+                                dataset_kwargs={"n_clients": 13, "total": 600, "seed": 7})),
+        tiny_spec(sampler=SamplerSpec(name="vrb", kwargs={"horizon": 4})),
+        tiny_spec(sampler=SamplerSpec(name="kvib", kwargs={"horizon": 5})),
+        tiny_spec(federation=dataclasses.replace(tiny_spec().federation, budget=5)),
+        tiny_spec(federation=dataclasses.replace(tiny_spec().federation, local_lr=0.06)),
+        tiny_spec(execution=ExecutionSpec(seed=12)),
+        tiny_spec(execution=ExecutionSpec(seed=11, oracle_metrics=False)),
+        tiny_spec(execution=ExecutionSpec(seed=11, ckpt_every=2)),
+    ]
+    prints = [config_fingerprint(s.to_dict()) for s in changed]
+    assert base not in prints, "a field change did not change the fingerprint"
+    assert len(set(prints)) == len(prints), "two different specs collided"
+
+
+# ---------------------------------------------------------------------------
+# Golden bit-identity: api.run(spec) == legacy run_federated(...)
+# ---------------------------------------------------------------------------
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb) and len(la) > 0
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("name", ["kvib", "vrb"])  # ISP + RSP
+@pytest.mark.parametrize("oracle", [True, False])
+@pytest.mark.parametrize("compiled", [True, False])
+def test_api_run_matches_legacy_run_federated(name, oracle, compiled):
+    spec = tiny_spec(
+        sampler=SamplerSpec(name=name, kwargs={"horizon": 4}),
+        execution=ExecutionSpec(seed=11, oracle_metrics=oracle, compiled=compiled),
+    )
+    h_api = api.run(spec)
+
+    # the legacy construction, by hand
+    ds = synthetic_classification(n_clients=12, total=600, seed=7)
+    sampler = make_sampler(name, n=ds.n_clients, budget=4, horizon=4)
+    cfg = FedConfig(
+        rounds=4, budget=4, local_steps=1, batch_size=8, local_lr=0.05,
+        seed=11, oracle_metrics=oracle, compiled=compiled,
+    )
+    h_legacy = run_federated(logistic_regression(), ds, sampler, cfg)
+
+    assert h_api.train_loss == h_legacy.train_loss
+    assert h_api.cohort_size == h_legacy.cohort_size
+    assert h_api.estimator_sq_error == h_legacy.estimator_sq_error
+    assert h_api.cohort_dropped == h_legacy.cohort_dropped
+    if oracle:
+        assert h_api.regret.costs == h_legacy.regret.costs
+        assert h_api.regret.opt_costs == h_legacy.regret.opt_costs
+    _assert_trees_equal(h_api.final_params, h_legacy.final_params)
+
+
+def test_api_run_matches_legacy_with_eval_data():
+    spec = tiny_spec()
+    built = api.build(spec)
+    ev = built.dataset.batch_all_clients(jax.random.PRNGKey(99), 4)
+    ev = (ev[0].reshape(-1, ev[0].shape[-1]), ev[1].reshape(-1))
+    h_api = api.run(spec, eval_data=ev, built=built)
+
+    ds = synthetic_classification(n_clients=12, total=600, seed=7)
+    sampler = make_sampler("kvib", n=ds.n_clients, budget=4, horizon=4)
+    cfg = FedConfig(rounds=4, budget=4, local_steps=1, batch_size=8,
+                    local_lr=0.05, seed=11)
+    h_legacy = run_federated(logistic_regression(), ds, sampler, cfg, eval_data=ev)
+    assert h_api.test_accuracy == h_legacy.test_accuracy
+    _assert_trees_equal(h_api.final_params, h_legacy.final_params)
+
+
+def test_run_rejects_built_from_different_spec():
+    built = api.build(tiny_spec())
+    other = tiny_spec(sampler=SamplerSpec(name="vrb", kwargs={"horizon": 4}))
+    with pytest.raises(ValueError, match="different spec"):
+        api.run(other, built=built)
+
+
+# ---------------------------------------------------------------------------
+# Zoo dispatch: api.run(spec) == the launcher's segment construction
+# ---------------------------------------------------------------------------
+
+
+def zoo_spec(**exec_over) -> ExperimentSpec:
+    exec_kw = dict(seed=5, compiled=True)
+    exec_kw.update(exec_over)
+    return ExperimentSpec(
+        task=TaskSpec(
+            kind="zoo",
+            name="smollm-360m",
+            reduced=True,
+            kwargs={"n_layers": 2, "d_model": 64, "d_ff": 128, "vocab": 128},
+            dataset="synthetic_tokens",
+            dataset_kwargs={"n_clients": 8, "seq_len": 16, "total_seqs": 256},
+        ),
+        sampler=SamplerSpec(name="kvib", kwargs={"horizon": 3}),
+        federation=FederationSpec(
+            rounds=3, budget=2, cohort=3, local_steps=2, batch_size=2,
+            local_lr=0.05,
+        ),
+        execution=ExecutionSpec(**exec_kw),
+    )
+
+
+def test_api_run_zoo_matches_launcher_construction():
+    from repro.data import synthetic_tokens
+    from repro.fed.round import build_fed_scan_segment
+    from repro.fed.state import run_segmented
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import transformer
+
+    spec = zoo_spec()
+    h_api = api.run(spec)
+
+    # what repro.launch.train --compiled builds, by hand
+    from repro.configs import get_config
+    from repro.fed.round import RoundSpec
+
+    cfg = get_config("smollm-360m").reduced(
+        n_layers=2, d_model=64, d_ff=128, vocab=128
+    )
+    ds = synthetic_tokens(n_clients=8, seq_len=16, vocab=cfg.vocab,
+                          total_seqs=256, seed=5)
+    sampler = make_sampler("kvib", n=8, budget=2, horizon=3)
+    rspec = RoundSpec(cohort=3, local_steps=2, local_lr=0.05, local_batch=2)
+    key = jax.random.PRNGKey(5)
+    params = transformer.init_params(cfg, key)
+    segment, make_state = build_fed_scan_segment(
+        cfg, rspec, sampler, ds, mesh=make_host_mesh()
+    )
+    state = run_segmented(
+        make_state(params, sampler.init(), key, 3), 3, segment
+    )
+
+    assert h_api.train_loss == [float(x) for x in np.asarray(state.metrics["loss"])]
+    assert h_api.cohort_size == [
+        int(x) for x in np.asarray(state.metrics["cohort_size"])
+    ]
+    _assert_trees_equal(h_api.final_params, state.params)
+
+
+def test_api_zoo_checkpoint_resume_and_fingerprint_guard(tmp_path):
+    """A spec-fingerprinted manager resumes a preempted api.run and refuses a
+    changed spec; the resumed run matches the uninterrupted one bitwise."""
+    from repro.fed.state import run_segmented
+
+    spec = zoo_spec(ckpt_every=1)
+    h_full = api.run(spec)
+
+    def manager_for(s):
+        return CheckpointManager(
+            str(tmp_path / "ck"), fingerprint=config_fingerprint(s.to_dict())
+        )
+
+    # "preempt" by running only the first segment: restore_template + manager
+    built = api.build(spec)
+    from repro.api.runner import _zoo_segment_and_state
+
+    segment, state = _zoo_segment_and_state(built)
+    manager = manager_for(spec)
+    run_segmented(state, 3, segment, ckpt_every=1, manager=manager, max_segments=1)
+
+    # a changed spec must refuse to resume from this manifest
+    changed = zoo_spec(ckpt_every=1, seed=6)
+    with pytest.raises(ValueError, match="fingerprint"):
+        manager_for(changed).restore(api.restore_template(changed))
+
+    # the same spec resumes and finishes identically to the full run
+    h_resumed = api.run(spec, ckpt_manager=manager_for(spec))
+    assert h_resumed.train_loss == h_full.train_loss
+    _assert_trees_equal(h_resumed.final_params, h_full.final_params)
+
+
+def test_restore_template_matches_saved_treedef(tmp_path):
+    """restore_template(spec) is structurally the state a manager of this
+    spec saves — for both stacks."""
+    spec = tiny_spec(execution=ExecutionSpec(seed=11, ckpt_every=2))
+    manager = CheckpointManager(
+        str(tmp_path / "sim"), fingerprint=config_fingerprint(spec.to_dict())
+    )
+    api.run(spec, ckpt_manager=manager)
+    restored = manager.restore(api.restore_template(spec))
+    assert int(restored.round) == 4
+
+    with pytest.raises(ValueError, match="compiled"):
+        api.restore_template(
+            tiny_spec(execution=ExecutionSpec(seed=11, compiled=False))
+        )
+
+
+# ---------------------------------------------------------------------------
+# Registries are extensible (custom scenarios ride the same front door)
+# ---------------------------------------------------------------------------
+
+
+def test_register_custom_task_and_dataset():
+    from repro.fed.tasks import logistic_regression as make_logreg
+
+    api.register_task("test_custom_logreg", make_logreg)
+    api.register_dataset(
+        "test_custom_data",
+        lambda n_clients, seed: synthetic_classification(
+            n_clients=n_clients, total=50 * n_clients, seed=seed
+        ),
+    )
+    assert "test_custom_logreg" in api.task_names()
+    assert "test_custom_data" in api.dataset_names()
+    spec = tiny_spec(
+        task=TaskSpec(
+            name="test_custom_logreg",
+            dataset="test_custom_data",
+            dataset_kwargs={"n_clients": 10, "seed": 3},
+        ),
+        federation=FederationSpec(rounds=2, budget=3, local_steps=1, batch_size=8),
+    )
+    hist = api.run(spec)
+    assert len(hist.train_loss) == 2
+    assert all(np.isfinite(hist.train_loss))
+
+
+# ---------------------------------------------------------------------------
+# CLI shim: flags -> spec projection and --dump-spec JSON
+# ---------------------------------------------------------------------------
+
+
+def test_cli_flags_project_onto_expected_spec():
+    from repro.launch.train import build_spec_from_args, make_parser
+
+    args = make_parser().parse_args(
+        ["--arch", "smollm-360m", "--reduced", "--rounds", "8", "--clients", "32",
+         "--budget", "6", "--sampler", "kvib", "--seq", "64", "--cohort", "8",
+         "--local-steps", "2", "--local-batch", "2", "--local-lr", "0.05",
+         "--seed", "0", "--compiled", "--ckpt-every", "2"]
+    )
+    spec = build_spec_from_args(args)
+    assert spec == ExperimentSpec(
+        task=TaskSpec(
+            kind="zoo", name="smollm-360m", reduced=True,
+            dataset="synthetic_tokens",
+            dataset_kwargs={"n_clients": 32, "seq_len": 64},
+        ),
+        sampler=SamplerSpec(name="kvib", kwargs={"horizon": 8}),
+        federation=FederationSpec(
+            rounds=8, budget=6, cohort=8, local_steps=2, batch_size=2,
+            local_lr=0.05,
+        ),
+        execution=ExecutionSpec(seed=0, compiled=True, ckpt_every=2),
+    )
+
+    # non-adaptive samplers don't get a horizon kwarg (as the old wiring had it)
+    args = make_parser().parse_args(["--sampler", "uniform_isp"])
+    assert build_spec_from_args(args).sampler == SamplerSpec(
+        name="uniform_isp", kwargs={}
+    )
+
+
+def test_cli_dump_spec_roundtrip(tmp_path):
+    """--dump-spec emits JSON that --spec consumes back to the identical
+    spec (the CPU CLI smoke the CI workflow also runs)."""
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+    flags = ["--arch", "smollm-360m", "--reduced", "--rounds", "3",
+             "--clients", "8", "--budget", "3", "--cohort", "4",
+             "--seq", "32", "--local-batch", "2"]
+    dumped = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", *flags, "--dump-spec"],
+        capture_output=True, text=True, timeout=300, env=env,
+    )
+    assert dumped.returncode == 0, dumped.stderr[-2000:]
+    spec = ExperimentSpec.from_json(dumped.stdout)
+
+    from repro.launch.train import build_spec_from_args, make_parser
+
+    assert spec == build_spec_from_args(make_parser().parse_args(flags))
+
+    path = tmp_path / "exp.json"
+    path.write_text(dumped.stdout)
+    redumped = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train",
+         "--spec", str(path), "--dump-spec"],
+        capture_output=True, text=True, timeout=300, env=env,
+    )
+    assert redumped.returncode == 0, redumped.stderr[-2000:]
+    assert json.loads(redumped.stdout) == json.loads(dumped.stdout)
+
+
+def test_cli_resume_requires_compiled():
+    from repro.launch.train import main
+
+    with pytest.raises(SystemExit):
+        main(["--resume", "--rounds", "2"])
+
+
+# ---------------------------------------------------------------------------
+# Export hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_api_all_exports_resolve():
+    for name in api.__all__:
+        assert getattr(api, name) is not None
+
+
+def test_top_level_repro_reexports_api():
+    import repro
+
+    assert repro.ExperimentSpec is ExperimentSpec
+    assert repro.run is api.run
+    from repro import ExperimentSpec as TopSpec  # noqa: F401
+
+    with pytest.raises(AttributeError):
+        repro.not_a_real_export

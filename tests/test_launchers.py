@@ -102,6 +102,65 @@ def test_compiled_train_survives_sigkill_and_resumes(tmp_path):
         np.testing.assert_array_equal(a[k], b[k], err_msg=k)
 
 
+@pytest.mark.slow  # four fresh-interpreter CLI runs with model compiles
+def test_spec_cli_reproduces_flag_run_through_kill_resume(tmp_path):
+    """Acceptance for the spec front door: ``--spec`` consuming a
+    ``--dump-spec``-emitted file reproduces the flag-driven run's final
+    params exactly — including through a SIGKILL + ``--resume`` cycle whose
+    manifest fingerprint derives from ``config_fingerprint(spec.to_dict())``."""
+    flags = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", "smollm-360m", "--reduced", "--compiled",
+        "--rounds", "4", "--clients", "8", "--budget", "3", "--cohort", "4",
+        "--seq", "32", "--local-batch", "2", "--ckpt-every", "2",
+    ]
+    base = subprocess.run(
+        flags + ["--ckpt", str(tmp_path / "flags")],
+        capture_output=True, text=True, timeout=600, env=_ENV,
+    )
+    assert base.returncode == 0, base.stderr[-2000:]
+
+    dumped = subprocess.run(
+        flags + ["--dump-spec"],
+        capture_output=True, text=True, timeout=600, env=_ENV,
+    )
+    assert dumped.returncode == 0, dumped.stderr[-2000:]
+    spec_path = tmp_path / "exp.json"
+    spec_path.write_text(dumped.stdout)
+
+    spec_args = [
+        sys.executable, "-m", "repro.launch.train",
+        "--spec", str(spec_path), "--ckpt", str(tmp_path / "spec"),
+    ]
+    killed = subprocess.run(
+        spec_args, capture_output=True, text=True, timeout=600,
+        env={**_ENV, "REPRO_KILL_AFTER_SEGMENTS": "1"},
+    )
+    assert killed.returncode == -9, (killed.returncode, killed.stderr[-2000:])
+    import json
+    manifest = json.loads((tmp_path / "spec_ckpts" / "manifest.json").read_text())
+    assert manifest["step"] == 2
+    # the manifest fingerprint IS the spec fingerprint
+    from repro.api import ExperimentSpec
+    from repro.checkpoint import config_fingerprint
+
+    spec = ExperimentSpec.load(str(spec_path))
+    assert manifest["config_fingerprint"] == config_fingerprint(spec.to_dict())
+
+    resumed = subprocess.run(
+        spec_args + ["--resume"],
+        capture_output=True, text=True, timeout=600, env=_ENV,
+    )
+    assert resumed.returncode == 0, resumed.stderr[-2000:]
+    assert "resumed from checkpoint step 2" in resumed.stdout
+
+    a = np.load(tmp_path / "flags.npz")
+    b = np.load(tmp_path / "spec.npz")
+    assert a.files == b.files and len(a.files) > 0
+    for k in a.files:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
 @pytest.mark.slow  # fresh-interpreter CLI: jax import + model compile per run
 def test_serve_cli_end_to_end():
     proc = subprocess.run(

@@ -29,8 +29,11 @@ def test_cohort_width_entry_points_exported():
     """The cohort-width aggregation surface AND the segmented-horizon /
     checkpoint subsystem reach users through the package __all__s: estimator
     entry points via repro.core, the scan/round/segment entry points via
-    repro.fed, the Pallas kernels via repro.kernels, and the checkpoint API
-    via repro.checkpoint."""
+    repro.fed, the Pallas kernels via repro.kernels, the checkpoint API via
+    repro.checkpoint, and the declarative spec front door via repro.api
+    (whose names are also re-exported from top-level repro)."""
+    import repro
+    import repro.api as api
     import repro.checkpoint as checkpoint
     import repro.core as core
     import repro.fed as fed
@@ -38,17 +41,25 @@ def test_cohort_width_entry_points_exported():
 
     for pkg, names in (
         (core, ("aggregate_and_error", "aggregate_and_error_cohort",
-                "assert_serializable_state")),
+                "assert_serializable_state", "sampler_names")),
         (fed, ("RoundSpec", "build_fed_scan", "build_fed_scan_segment",
                "build_round_step", "build_segment_runner", "run_segmented",
                "TrainState")),
         (kernels, ("fused_multi_weighted_agg", "fused_cohort_agg_and_error")),
         (checkpoint, ("save_checkpoint", "restore_checkpoint",
                       "CheckpointManager", "config_fingerprint")),
+        (api, ("ExperimentSpec", "TaskSpec", "SamplerSpec", "FederationSpec",
+               "ExecutionSpec", "run", "build", "restore_template",
+               "register_task", "register_dataset")),
     ):
         for name in names:
             assert name in pkg.__all__, f"{pkg.__name__}.__all__ missing {name}"
             assert callable(getattr(pkg, name)), f"{pkg.__name__}.{name} not callable"
+    # the spec surface is importable from top-level repro (lazy PEP 562)
+    for name in ("ExperimentSpec", "TaskSpec", "SamplerSpec", "FederationSpec",
+                 "ExecutionSpec", "run", "build"):
+        assert name in repro.__all__
+        assert getattr(repro, name) is getattr(api, name)
     # module-level __all__s agree with what the packages re-export
     assert "aggregate_and_error_cohort" in estimator.__all__
     import importlib
