@@ -1,4 +1,74 @@
-from repro.analysis.hlo import analyze_hlo
+"""Static analysis of the compiled federated programs.
+
+Two layers:
+
+* cost models — ``analyze_hlo`` (trip-count-aware HLO FLOP/byte/collective
+  walker) and ``roofline`` (hardware projection of those counts);
+* the trace-invariant lint suite — ``repro.analysis.lint``, which walks
+  jaxprs and post-SPMD HLO and machine-checks the structural contracts the
+  repo's performance claims rest on.
+
+Enforced trace invariants (``repro.analysis.lint``)
+---------------------------------------------------
+
+* **width** — the deployable round body and the pod-scale scan body
+  aggregate at cohort width: no floating intermediate scales as O(N*D)
+  (client count x parameter dimension).  Legitimate N-sized tensors are
+  (N,)-vectors (sampler probabilities, feedback, weights) and integer
+  key/index material.  ``audit_width`` (jaxpr) / ``audit_width_hlo``
+  (post-SPMD compiled HLO).
+* **scan-safety** — every registered ``Sampler``'s ``probabilities`` /
+  ``sample_from`` / ``update`` traces abstractly: no data-dependent Python
+  control flow, no host callbacks (``pure_callback`` / ``io_callback`` /
+  ``debug_callback``), static shapes, and ``update`` preserves the state's
+  avals exactly (the scan-carry contract).  ``audit_scan_safety``.
+* **dtype** — no silent float64/complex128 promotion anywhere in the traced
+  graph, and no weak-typed outputs (weak types are erased by checkpoint
+  round trips, changing carry avals on resume).  ``audit_dtypes``; fed by
+  ``core.samplers.assert_serializable_state``'s leaf-level checks.
+* **compile-once** — the segmented runner compiles its jitted segment
+  exactly once across identical segments AND across a checkpoint resume,
+  with the carry donated wherever the backend supports donation.
+  ``audit_compile_once``.
+
+``repro.analysis.lint.run_suite(spec)`` applies the suite to one
+``repro.api.ExperimentSpec``; ``python -m repro.analysis.lint`` sweeps the
+whole sampler registry x oracle/deployable x compiled/reference and exits
+nonzero on any finding.  The lint names below are re-exported lazily (PEP
+562) so importing the cost models never drags in jax tracing machinery.
+"""
+from repro.analysis.hlo import DTYPE_BYTES, UnknownDtypeError, analyze_hlo, dtype_bytes
 from repro.analysis.roofline import HW, RooflineTerms, model_flops, roofline
 
-__all__ = ["analyze_hlo", "HW", "RooflineTerms", "model_flops", "roofline"]
+_LINT_EXPORTS = (
+    "Finding",
+    "LintReport",
+    "audit_width",
+    "audit_width_hlo",
+    "audit_scan_safety",
+    "audit_dtypes",
+    "audit_compile_once",
+    "run_suite",
+    "sweep_registry",
+)
+
+__all__ = [
+    "analyze_hlo",
+    "DTYPE_BYTES",
+    "dtype_bytes",
+    "UnknownDtypeError",
+    "HW",
+    "RooflineTerms",
+    "model_flops",
+    "roofline",
+    "lint",
+    *_LINT_EXPORTS,
+]
+
+
+def __getattr__(name):
+    if name in _LINT_EXPORTS or name == "lint":
+        import repro.analysis.lint as _lint
+
+        return _lint if name == "lint" else getattr(_lint, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -30,13 +30,40 @@ from __future__ import annotations
 import re
 from collections import defaultdict
 
-__all__ = ["analyze_hlo", "DTYPE_BYTES"]
+__all__ = ["analyze_hlo", "DTYPE_BYTES", "UnknownDtypeError", "dtype_bytes"]
 
 DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
     "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
     "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
 }
+
+
+class UnknownDtypeError(KeyError):
+    """An HLO dtype token with no ``DTYPE_BYTES`` entry.
+
+    Raised (instead of a bare ``KeyError`` whose message is just the token)
+    when a shape regex built from an extended dtype table meets the original
+    byte table — the fix is adding the dtype's width to ``DTYPE_BYTES``."""
+
+    def __init__(self, dtype: str):
+        super().__init__(dtype)
+        self.dtype = dtype
+
+    def __str__(self) -> str:
+        return (
+            f"unknown HLO dtype {self.dtype!r}: not in "
+            "repro.analysis.hlo.DTYPE_BYTES — add its byte width there "
+            f"(known: {sorted(DTYPE_BYTES)})"
+        )
+
+
+def dtype_bytes(dtype: str) -> int:
+    """Byte width of an HLO dtype token; ``UnknownDtypeError`` if unmapped."""
+    try:
+        return DTYPE_BYTES[dtype]
+    except KeyError:
+        raise UnknownDtypeError(dtype) from None
 
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
 
@@ -75,7 +102,7 @@ def _shape_elems(type_str: str):
 
 
 def _bytes_of(type_str: str) -> int:
-    return sum(DTYPE_BYTES[d] * n for d, n in _shape_elems(type_str))
+    return sum(dtype_bytes(d) * n for d, n in _shape_elems(type_str))
 
 
 class _Op:

@@ -1,0 +1,978 @@
+"""Trace-invariant lint suite: static analysis of jaxprs and post-SPMD HLO.
+
+The performance story of this repo rests on *structural* properties of the
+traced program, not on anything a unit test of outputs can see:
+
+* **width** — the deployable round body aggregates at cohort width: no
+  floating-point intermediate scales as O(N*D) (client count x parameter
+  dimension).  The legitimate N-sized tensors are (N,)-vectors (sampler
+  probabilities, feedback, weights) and integer key/index material.
+* **scan-safety** — every registered ``Sampler``'s ``probabilities`` /
+  ``sample_from`` / ``update`` traces abstractly (no data-dependent Python
+  control flow), contains no host callbacks, has static shapes, and
+  ``update`` preserves the state's avals exactly (the scan-carry contract).
+* **dtype** — no silent float64/complex128 promotion anywhere in the traced
+  graph, and no weak-typed outputs (weak types are erased by checkpoint
+  round trips, changing carry avals and forcing recompiles on resume).
+* **compile-once** — the segmented runner compiles its segment function
+  exactly once across segment boundaries AND across a checkpoint resume
+  (numpy round trip of the carry), and the carry is donated on backends
+  that support donation.
+
+Until this module existed those invariants were enforced by string-matching
+``str(jax.make_jaxpr(...))`` probes — which pass *vacuously* the moment
+jaxpr pretty-printing changes.  The auditors here walk the jaxpr equation
+graph (recursing into scan/pjit/cond/... sub-jaxprs) and the parsed post-SPMD
+HLO (reusing ``repro.analysis.hlo``'s parser), and report typed ``Finding``s
+with op, shape, and source provenance.
+
+Entry points
+------------
+
+* ``run_suite(spec)`` — lint one ``repro.api.ExperimentSpec``: the sampler's
+  scan-safety, the round body's dtype hygiene, width on the deployable /
+  pod-scale bodies, the compile-once guard on the segmented runner, and
+  (optionally) the width audit repeated on the compiled HLO.
+* ``sweep_registry()`` — the full matrix: every registered sampler x
+  oracle/deployable x compiled/reference.
+* ``python -m repro.analysis.lint`` — CLI over ``sweep_registry`` (or
+  ``--spec file.json`` for one spec); exits nonzero on any finding.
+
+All auditors are pure functions jaxpr/HLO-text -> findings so tests can
+feed them deliberately-broken programs (an O(N*D) body, a callback-bearing
+sampler, an f64 leak) and pin the exact finding each produces.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+from typing import Any, Callable, Iterable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Finding",
+    "LintReport",
+    "CALLBACK_PRIMITIVES",
+    "iter_eqns",
+    "audit_width",
+    "audit_width_hlo",
+    "audit_scan_safety",
+    "audit_dtypes",
+    "audit_compile_once",
+    "run_suite",
+    "sweep_registry",
+    "main",
+]
+
+# Host-callback primitives: a scan body containing one forces a device->host
+# round trip per iteration (and io/debug callbacks are ordered side effects),
+# which breaks the whole-horizon-on-device execution model.
+CALLBACK_PRIMITIVES = frozenset(
+    {"pure_callback", "io_callback", "debug_callback", "callback"}
+)
+
+# Dtypes whose appearance anywhere in a traced graph is a silent promotion
+# bug on this repo's f32 substrate (checked by audit_dtypes).
+_WIDE_DTYPES = frozenset({"float64", "complex128"})
+
+# Float dtypes in HLO shape syntax (audit_width_hlo); integer/pred buffers
+# (keys, indices, masks) are legitimately N-sized and cheap.
+_HLO_FLOAT_DTYPES = frozenset(
+    {"f64", "f32", "f16", "bf16", "f8e4m3fn", "f8e5m2", "c64", "c128"}
+)
+
+
+# ---------------------------------------------------------------------------
+# Findings and reports
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One contract violation: which check, where, and the offending op.
+
+    check:      "width" | "scan_safety" | "dtype" | "compile_once"
+    target:     what was linted ("round_body[deployable]", "sampler:kvib.update")
+    message:    one-sentence statement of the defect
+    op:         offending primitive / HLO op name ("" when not op-shaped)
+    shape:      offending aval, e.g. "f32[12,60,10]" ("" when not shape-shaped)
+    provenance: source location / computation path of the offending equation
+    count:      occurrences aggregated into this finding (>= 1)
+    """
+
+    check: str
+    target: str
+    message: str
+    op: str = ""
+    shape: str = ""
+    provenance: str = ""
+    count: int = 1
+
+    def render(self) -> str:
+        loc = f"  [{self.provenance}]" if self.provenance else ""
+        opshape = " ".join(x for x in (self.op, self.shape) if x)
+        mult = f" x{self.count}" if self.count > 1 else ""
+        head = f"{self.check:<12} {self.target}: "
+        return head + (f"{opshape}{mult} — " if opshape else "") + self.message + loc
+
+
+@dataclasses.dataclass
+class LintReport:
+    """Findings plus the list of checks that actually ran.
+
+    ``checked`` is what makes a clean report meaningful: an empty findings
+    list only certifies the invariants named there."""
+
+    findings: list = dataclasses.field(default_factory=list)
+    checked: list = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def add(self, findings: Iterable[Finding], checked: str) -> None:
+        self.findings.extend(findings)
+        self.checked.append(checked)
+
+    def extend(self, other: "LintReport") -> None:
+        self.findings.extend(other.findings)
+        self.checked.extend(other.checked)
+
+    def render(self) -> str:
+        lines = []
+        if self.ok:
+            lines.append(
+                f"lint clean: {len(self.checked)} checks, no findings"
+            )
+        else:
+            lines.append(
+                f"lint FAILED: {len(self.findings)} finding(s) "
+                f"across {len(self.checked)} checks"
+            )
+            for f in self.findings:
+                lines.append("  " + f.render())
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr walking
+# ---------------------------------------------------------------------------
+
+
+def _as_jaxpr(jaxpr):
+    """Accept a ClosedJaxpr or a raw Jaxpr (duck-typed: no jax.core import)."""
+    return jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr
+
+
+def _sub_jaxprs(eqn) -> Iterator[Any]:
+    """Sub-jaxprs referenced by an equation's params (scan/pjit/cond/while/
+    custom_vjp/remat/... — anything that stores a Jaxpr or a sequence of
+    them), duck-typed so new higher-order primitives are covered for free."""
+    for val in eqn.params.values():
+        vals = val if isinstance(val, (tuple, list)) else (val,)
+        for v in vals:
+            if hasattr(v, "eqns") or hasattr(v, "jaxpr"):
+                yield _as_jaxpr(v)
+
+
+def iter_eqns(jaxpr, path: tuple = ()) -> Iterator[tuple]:
+    """Yield ``(eqn, path)`` for every equation in ``jaxpr`` and all nested
+    sub-jaxprs; ``path`` is the tuple of enclosing higher-order primitive
+    names (e.g. ``("scan", "pjit")``)."""
+    for eqn in _as_jaxpr(jaxpr).eqns:
+        yield eqn, path
+        for sub in _sub_jaxprs(eqn):
+            yield from iter_eqns(sub, path + (eqn.primitive.name,))
+
+
+def _source_of(eqn, path: tuple) -> str:
+    where = "/".join(path)
+    try:
+        from jax._src import source_info_util
+
+        src = source_info_util.summarize(eqn.source_info)
+    except Exception:
+        src = ""
+    return "/".join(x for x in (where, src) if x)
+
+
+def _aval_of(var):
+    return getattr(var, "aval", None)
+
+
+def _dtype_name(dtype) -> str:
+    """Printable dtype name; extended dtypes (typed PRNG keys, ``key<fry>``)
+    have no numpy equivalent, so fall back to their string form."""
+    try:
+        return np.dtype(dtype).name
+    except TypeError:
+        return str(dtype)
+
+
+def _shape_str(aval) -> str:
+    return f"{_dtype_name(aval.dtype)}[{','.join(str(d) for d in aval.shape)}]"
+
+
+def _is_float(aval) -> bool:
+    try:
+        return jnp.issubdtype(aval.dtype, jnp.floating) or jnp.issubdtype(
+            aval.dtype, jnp.complexfloating
+        )
+    except TypeError:  # extended dtypes (typed PRNG keys) are never float
+        return False
+
+
+# ---------------------------------------------------------------------------
+# Pass 1: width auditor (jaxpr)
+# ---------------------------------------------------------------------------
+
+
+def _offends_width(aval, n: int, allow: frozenset) -> bool:
+    """An O(N*D) intermediate: a floating array with a client-count axis AND
+    more than one element per client.  (N,)-vectors (probabilities, feedback,
+    weights) pass; integer key/index material passes (not float)."""
+    if aval is None or not hasattr(aval, "shape") or not hasattr(aval, "dtype"):
+        return False
+    shape = tuple(aval.shape)
+    if shape in allow or not shape:
+        return False
+    if not all(isinstance(d, int) for d in shape):
+        return True  # dynamic shapes violate the static-shape contract anyway
+    if n not in shape:
+        return False
+    if int(np.prod(shape, dtype=np.int64)) <= n:
+        return False
+    return _is_float(aval)
+
+
+def audit_width(
+    jaxpr,
+    n: int,
+    *,
+    target: str = "",
+    allow: Iterable[tuple] = (),
+) -> list:
+    """Prove no floating intermediate scales as O(N*D) for client count ``n``.
+
+    Walks every equation (sub-jaxprs included) and flags equations that
+    *introduce* an offending array — an output with an ``n``-sized axis and
+    more than one element per client, where no input already offends (so a
+    single leaked buffer yields one finding at its origin, not one per
+    downstream consumer).  Findings are aggregated per (op, shape).
+
+    ``allow`` lists exact shape tuples to permit (e.g. a deliberate
+    diagnostic buffer).  Pick ``n`` distinctive (not colliding with model or
+    batch dimensions) when building lint fixtures — the auditor cannot tell a
+    client axis from an accidental equal-sized one.
+
+    Baked-in N-sized *data* (jaxpr constvars — e.g. the federated dataset
+    itself, or an N-wide array handed in as a body input) is not an
+    intermediate and does not suppress: the first equation that reads it
+    into an N-wide float buffer is the origin and gets the finding.
+    """
+    allow = frozenset(tuple(s) for s in allow)
+    # constvars at every nesting level, plus the top-level inputs, are data —
+    # exempt from both flagging and origin-suppression.
+    exempt = set()
+    top = _as_jaxpr(jaxpr)
+    exempt.update(id(v) for v in getattr(top, "constvars", ()))
+    exempt.update(id(v) for v in top.invars)
+    for eqn, _path in iter_eqns(jaxpr):
+        for sub in _sub_jaxprs(eqn):
+            exempt.update(id(v) for v in getattr(sub, "constvars", ()))
+
+    grouped: dict = {}
+    for eqn, path in iter_eqns(jaxpr):
+        if any(
+            id(v) not in exempt and _offends_width(_aval_of(v), n, allow)
+            for v in eqn.invars
+        ):
+            continue  # propagation of an already-reported buffer
+        for var in eqn.outvars:
+            aval = _aval_of(var)
+            if not _offends_width(aval, n, allow):
+                continue
+            key = (eqn.primitive.name, _shape_str(aval))
+            if key in grouped:
+                grouped[key] = dataclasses.replace(
+                    grouped[key], count=grouped[key].count + 1
+                )
+            else:
+                grouped[key] = Finding(
+                    check="width",
+                    target=target,
+                    message=(
+                        f"intermediate scales as O(N*D) with N={n} "
+                        "(cohort-width contract: only (N,)-vectors may be "
+                        "client-sized)"
+                    ),
+                    op=eqn.primitive.name,
+                    shape=_shape_str(aval),
+                    provenance=_source_of(eqn, path),
+                )
+    return list(grouped.values())
+
+
+# ---------------------------------------------------------------------------
+# Pass 1b: width auditor (post-SPMD HLO text)
+# ---------------------------------------------------------------------------
+
+
+def audit_width_hlo(hlo_text: str, n: int, *, target: str = "") -> list:
+    """The width audit repeated on compiled (post-optimization, post-SPMD)
+    HLO text — what XLA will actually materialize, after fusion has had its
+    say.  Reuses ``repro.analysis.hlo``'s computation parser.
+
+    Same origin filtering as :func:`audit_width`: ops whose operands already
+    carry an offending shape are propagation, not origins; ``parameter`` ops
+    are the caller's problem (the call edge is walked too)."""
+    from repro.analysis import hlo as hlo_mod
+
+    def offends(type_str: str) -> bool:
+        for dtype, dims in hlo_mod._SHAPE_RE.findall(type_str):
+            if dtype not in _HLO_FLOAT_DTYPES or not dims:
+                continue
+            shape = [int(d) for d in dims.split(",")]
+            if n in shape and int(np.prod(shape, dtype=np.int64)) > n:
+                return True
+        return False
+
+    grouped: dict = {}
+    comps = hlo_mod._parse(hlo_text)
+    for cname, ops in comps.items():
+        symtab = {op.name: op.rtype for op in ops}
+        for op in ops:
+            if op.opname in ("parameter", "get-tuple-element", "tuple"):
+                continue  # plumbing: the producer is flagged where it lives
+            if op.opname == "constant":
+                continue  # baked-in input data (the dataset), not an intermediate
+            if not offends(op.rtype):
+                continue
+            paren = op.rest[op.rest.find("(") + 1 :]
+            operand_types = [
+                symtab.get(name, "")
+                for name in hlo_mod._OPERAND_RE.findall(paren.split(")")[0])
+            ]
+            if any(offends(t) for t in operand_types):
+                continue  # propagation
+            key = (op.opname, op.rtype.strip())
+            if key in grouped:
+                grouped[key] = dataclasses.replace(
+                    grouped[key], count=grouped[key].count + 1
+                )
+            else:
+                grouped[key] = Finding(
+                    check="width",
+                    target=target,
+                    message=(
+                        f"HLO op materializes an O(N*D) buffer with N={n} "
+                        "after XLA optimization"
+                    ),
+                    op=op.opname,
+                    shape=op.rtype.strip().split(" ")[0],
+                    provenance=f"{cname}/%{op.name}",
+                )
+    return list(grouped.values())
+
+
+# ---------------------------------------------------------------------------
+# Pass 2: sampler scan-safety
+# ---------------------------------------------------------------------------
+
+
+def _leaf_sig(leaf) -> tuple:
+    return (
+        tuple(leaf.shape),
+        np.dtype(leaf.dtype).name,
+        bool(getattr(leaf, "weak_type", False)),
+    )
+
+
+def audit_scan_safety(sampler, *, target: str = "") -> list:
+    """Abstractly trace a ``Sampler``'s scan-facing methods and reject
+    everything that cannot ride a ``lax.scan`` carry.
+
+    Per method in ``Sampler.scan_safe_methods`` (``probabilities`` /
+    ``sample_from`` / ``update``), traced with ``ShapeDtypeStruct`` arguments
+    (never concrete values — concrete tracing would silently *succeed* on
+    data-dependent Python branches):
+
+    * a ``ConcretizationTypeError`` (bool/int/array conversion of a tracer)
+      is surfaced as a data-dependent-control-flow finding;
+    * any other trace failure is a finding (the method cannot be staged out);
+    * host callbacks (``pure_callback`` / ``io_callback`` /
+      ``debug_callback``) anywhere in the jaxpr are findings;
+    * non-static output shapes are findings;
+    * ``probabilities`` must return a float ``(n,)`` vector;
+    * ``update`` must preserve the state pytree's structure and every leaf's
+      (shape, dtype, weak_type) exactly — aval drift would fail the scan
+      carry on round 2, but only at trace time of some downstream caller;
+      here it is caught at the sampler.
+    """
+    name = target or f"sampler:{type(sampler).__name__}"
+    n = sampler.n
+    f32 = jnp.float32
+    state_sds = sampler.abstract_state()
+    key_sds = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    probs_sds = jax.ShapeDtypeStruct((n,), f32)
+    draw_sds = sampler.abstract_draw()
+    fb_sds = jax.ShapeDtypeStruct((n,), f32)
+
+    cases = {
+        "probabilities": (sampler.probabilities, (state_sds,)),
+        "sample_from": (sampler.sample_from, (probs_sds, key_sds)),
+        "update": (sampler.update, (state_sds, draw_sds, fb_sds)),
+    }
+    findings: list = []
+    for mname in sampler.scan_safe_methods:
+        fn, args = cases[mname]
+        mtarget = f"{name}.{mname}"
+        try:
+            closed = jax.make_jaxpr(fn)(*args)
+        except jax.errors.ConcretizationTypeError as e:
+            findings.append(
+                Finding(
+                    check="scan_safety",
+                    target=mtarget,
+                    message=(
+                        "data-dependent Python control flow: "
+                        + str(e).splitlines()[0]
+                    ),
+                )
+            )
+            continue
+        except Exception as e:  # noqa: BLE001 — any trace failure is a finding
+            findings.append(
+                Finding(
+                    check="scan_safety",
+                    target=mtarget,
+                    message=f"abstract trace failed: {type(e).__name__}: "
+                    + str(e).splitlines()[0],
+                )
+            )
+            continue
+
+        for eqn, path in iter_eqns(closed):
+            if eqn.primitive.name in CALLBACK_PRIMITIVES:
+                findings.append(
+                    Finding(
+                        check="scan_safety",
+                        target=mtarget,
+                        message="host callback inside a scan-carried method "
+                        "(one device->host round trip per round)",
+                        op=eqn.primitive.name,
+                        provenance=_source_of(eqn, path),
+                    )
+                )
+            for var in eqn.outvars:
+                aval = _aval_of(var)
+                if aval is not None and hasattr(aval, "shape") and not all(
+                    isinstance(d, int) for d in aval.shape
+                ):
+                    findings.append(
+                        Finding(
+                            check="scan_safety",
+                            target=mtarget,
+                            message="non-static shape in traced method",
+                            op=eqn.primitive.name,
+                            shape=str(aval.shape),
+                            provenance=_source_of(eqn, path),
+                        )
+                    )
+
+        out_sds = jax.eval_shape(fn, *args)
+        if mname == "probabilities":
+            leaves = jax.tree_util.tree_leaves(out_sds)
+            if (
+                len(leaves) != 1
+                or tuple(leaves[0].shape) != (n,)
+                or not jnp.issubdtype(leaves[0].dtype, jnp.floating)
+            ):
+                findings.append(
+                    Finding(
+                        check="scan_safety",
+                        target=mtarget,
+                        message=f"probabilities must return one float (n={n},) "
+                        f"vector, got {jax.tree_util.tree_map(_shape_str, out_sds)}",
+                    )
+                )
+        if mname == "update":
+            in_tree = jax.tree_util.tree_structure(state_sds)
+            out_tree = jax.tree_util.tree_structure(out_sds)
+            if in_tree != out_tree:
+                findings.append(
+                    Finding(
+                        check="scan_safety",
+                        target=mtarget,
+                        message="update() changes the state treedef — the "
+                        "scan carry requires a fixed structure",
+                    )
+                )
+            else:
+                in_leaves = jax.tree_util.tree_leaves(state_sds)
+                out_leaves = jax.tree_util.tree_leaves(out_sds)
+                for i, (a, b) in enumerate(zip(in_leaves, out_leaves)):
+                    if _leaf_sig(a) != _leaf_sig(b):
+                        findings.append(
+                            Finding(
+                                check="scan_safety",
+                                target=mtarget,
+                                message=(
+                                    f"update() drifts state leaf {i}: "
+                                    f"{_leaf_sig(a)} -> {_leaf_sig(b)} — the "
+                                    "scan carry requires stable avals "
+                                    "(shape, dtype, weak_type)"
+                                ),
+                            )
+                        )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Pass 3: dtype auditor
+# ---------------------------------------------------------------------------
+
+
+def audit_dtypes(jaxpr, *, target: str = "") -> list:
+    """Flag silent f64/weak-type promotion in a traced graph.
+
+    * Any equation that *introduces* a float64/complex128 array (output wide,
+      no input wide) is a finding at the promotion point — downstream ops
+      merely consuming the wide value are not re-reported, so one leak yields
+      one finding.
+    * Any weak-typed floating *output* of the jaxpr is a finding: weak types
+      do not survive checkpoint round trips (numpy has no weak scalars), so a
+      weak carry leaf means resume-time aval drift and recompilation.
+    """
+    findings: list = []
+    closed = _as_jaxpr(jaxpr)
+
+    def wide(var) -> bool:
+        aval = _aval_of(var)
+        return (
+            aval is not None
+            and hasattr(aval, "dtype")
+            and _dtype_name(aval.dtype) in _WIDE_DTYPES
+        )
+
+    for i, var in enumerate(getattr(closed, "constvars", ())):
+        if wide(var):
+            findings.append(
+                Finding(
+                    check="dtype",
+                    target=target,
+                    message=f"constvar {i} bakes 64-bit data into the graph",
+                    shape=_shape_str(var.aval),
+                )
+            )
+
+    seen: dict = {}
+    for eqn, path in iter_eqns(jaxpr):
+        if any(wide(v) for v in eqn.invars):
+            continue  # propagation; the introduction site was flagged
+        for var in eqn.outvars:
+            if not wide(var):
+                continue
+            key = (eqn.primitive.name, _shape_str(var.aval))
+            if key in seen:
+                seen[key] = dataclasses.replace(seen[key], count=seen[key].count + 1)
+            else:
+                seen[key] = Finding(
+                    check="dtype",
+                    target=target,
+                    message="silent 64-bit promotion (f64/c128 introduced "
+                    "into an f32 graph)",
+                    op=eqn.primitive.name,
+                    shape=_shape_str(var.aval),
+                    provenance=_source_of(eqn, path),
+                )
+    findings.extend(seen.values())
+
+    for i, var in enumerate(closed.outvars):
+        aval = _aval_of(var)
+        if (
+            aval is not None
+            and hasattr(aval, "dtype")
+            and getattr(aval, "weak_type", False)
+            and _is_float(aval)
+        ):
+            findings.append(
+                Finding(
+                    check="dtype",
+                    target=target,
+                    message=f"output {i} is weak-typed — weak types are "
+                    "erased by checkpoint round trips, changing the carry "
+                    "avals on resume",
+                    shape=_shape_str(aval),
+                )
+            )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Pass 4: compile-once guard
+# ---------------------------------------------------------------------------
+
+
+def audit_compile_once(
+    segment_fn,
+    init_state,
+    n_rounds: int,
+    *,
+    n_segments: int = 2,
+    resume: bool = True,
+    target: str = "",
+) -> list:
+    """Assert the segmented runner's jit entry point compiles exactly once.
+
+    Static part: ``segment_fn`` built by ``fed.state.make_segment_fn``
+    carries lint handles (``segment_fn._lint``) declaring its donation
+    setup; the carry must be donated whenever the backend supports donation
+    (everything but CPU) and the builder asked for it.
+
+    Dynamic part: runs ``n_segments`` identical-length segments through the
+    jit cache counter and verifies the cache grows by exactly one entry;
+    then (``resume=True``) round-trips the carry through numpy — exactly the
+    transport a ``CheckpointManager`` save/restore applies — and runs one
+    more segment, verifying NO new compilation.  A recompile here means some
+    carry leaf's aval is not stable under checkpointing (weak types, dtype
+    drift, non-canonical shardings) and every resume would pay a full
+    compile.
+
+    The probe executes ``(n_segments + 1) * n_rounds`` real rounds, so
+    callers hand it a reduced-horizon build (see ``run_suite``).
+    """
+    name = target or "segment_runner"
+    findings: list = []
+    info = getattr(segment_fn, "_lint", None)
+    backend = jax.default_backend()
+    if info is None:
+        findings.append(
+            Finding(
+                check="compile_once",
+                target=name,
+                message="segment fn carries no lint handles — not built via "
+                "fed.state.make_segment_fn, so donation cannot be verified",
+            )
+        )
+        donating = False
+    else:
+        expected = (0,) if info["donate"] and backend != "cpu" else ()
+        if tuple(info["donate_argnums"]) != expected:
+            findings.append(
+                Finding(
+                    check="compile_once",
+                    target=name,
+                    message=(
+                        f"carry donation mismatch on backend {backend!r}: "
+                        f"declared donate_argnums={info['donate_argnums']}, "
+                        f"expected {expected} — an undonated carry doubles "
+                        "peak state memory per segment"
+                    ),
+                )
+            )
+        donating = expected != ()
+
+    if not hasattr(segment_fn, "_cache_size"):
+        findings.append(
+            Finding(
+                check="compile_once",
+                target=name,
+                message="segment fn exposes no jit cache counter "
+                "(_cache_size); compile-once cannot be verified",
+            )
+        )
+        return findings
+
+    def call(state):
+        arg = jax.tree_util.tree_map(jnp.copy, state) if donating else state
+        return segment_fn(arg, n_rounds)
+
+    before = segment_fn._cache_size()
+    state = init_state
+    for _ in range(n_segments):
+        state = call(state)
+    grew = segment_fn._cache_size() - before
+    if grew != 1:
+        findings.append(
+            Finding(
+                check="compile_once",
+                target=name,
+                message=f"{grew} compilations across {n_segments} identical "
+                f"{n_rounds}-round segments (expected exactly 1)",
+            )
+        )
+    if resume:
+        # The numpy round trip IS the checkpoint transport: save_checkpoint
+        # writes np arrays, restore feeds them back to the device.
+        restored = jax.tree_util.tree_map(
+            lambda x: jnp.asarray(np.asarray(x)), state
+        )
+        mid = segment_fn._cache_size()
+        call(restored)
+        if segment_fn._cache_size() != mid:
+            findings.append(
+                Finding(
+                    check="compile_once",
+                    target=name,
+                    message="checkpoint resume recompiles: some carry leaf's "
+                    "aval is not stable under the numpy round trip (weak "
+                    "type / dtype / sharding drift)",
+                )
+            )
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# The suite: lint one ExperimentSpec
+# ---------------------------------------------------------------------------
+
+
+def _probe_fed_config(cfg, probe_rounds: int, n_segments: int):
+    """A reduced-horizon copy of ``cfg`` for the compile-once probe: enough
+    rounds for the segments the audit runs (including the resume replay),
+    nothing more."""
+    return dataclasses.replace(cfg, rounds=probe_rounds * (n_segments + 1))
+
+
+def run_suite(
+    spec,
+    *,
+    hlo: bool | None = None,
+    compile_guard: bool | None = None,
+    probe_rounds: int = 2,
+) -> LintReport:
+    """Lint one ``repro.api.ExperimentSpec`` — the spec front door.
+
+    Passes applied (each recorded in ``LintReport.checked``):
+
+    * scan-safety on the spec's sampler (always);
+    * dtype audit on the traced round body (always);
+    * width audit on the round body's jaxpr when the body declares the
+      cohort-width contract: deployable simulation bodies
+      (``oracle_metrics=False`` without ``exact_oracle_equiv``) and every
+      pod-scale (zoo) body.  Oracle bodies legitimately hold (N, D) buffers
+      (their diagnostics need them) and are not width-audited, as is the
+      declared N-width ``exact_oracle_equiv`` escape hatch;
+    * compile-once guard on the segmented runner (simulation stack, compiled
+      specs; default on — ``compile_guard=False`` skips, ``True`` forces it
+      for zoo specs too, where it must first build and compile the full
+      model and is therefore off by default);
+    * the width audit repeated on post-SPMD compiled HLO (width-audited
+      compiled simulation bodies; same defaulting as ``compile_guard``).
+
+    Returns a :class:`LintReport`; ``report.ok`` is the gate.
+    """
+    from repro import api
+
+    built = api.build(spec)
+    report = LintReport()
+    sampler_target = f"sampler:{spec.sampler.name}"
+    report.add(
+        audit_scan_safety(built.sampler, target=sampler_target),
+        f"scan_safety:{sampler_target}",
+    )
+
+    n = built.dataset.n_clients
+    if built.kind == "task":
+        from repro.fed import server as fed_server
+
+        cfg = built.fed_config
+        mode = "oracle" if cfg.oracle_metrics else (
+            "deployable/scatter" if cfg.exact_oracle_equiv else "deployable"
+        )
+        body_target = f"round_body[{mode}]"
+        body, (carry, xs) = fed_server.round_body_for_lint(
+            built.task, built.dataset, built.sampler, cfg, None
+        )
+        closed = jax.make_jaxpr(body)(carry, xs)
+        report.add(audit_dtypes(closed, target=body_target), f"dtype:{body_target}")
+
+        width_applies = not cfg.oracle_metrics and not cfg.exact_oracle_equiv
+        if width_applies:
+            report.add(
+                audit_width(closed, n, target=body_target),
+                f"width:{body_target}(N={n})",
+            )
+        if cfg.compiled and compile_guard is not False:
+            probe_cfg = _probe_fed_config(cfg, probe_rounds, 2)
+            segment, state = fed_server.build_segment_runner(
+                built.task, built.dataset, built.sampler, probe_cfg, None
+            )
+            seg_target = f"segment_runner[{mode}]"
+            report.add(
+                audit_compile_once(
+                    segment, state, probe_rounds, target=seg_target
+                ),
+                f"compile_once:{seg_target}",
+            )
+        if cfg.compiled and width_applies and hlo is not False:
+            text = jax.jit(body).lower(carry, xs).compile().as_text()
+            report.add(
+                audit_width_hlo(text, n, target=f"hlo:{body_target}"),
+                f"width_hlo:{body_target}(N={n})",
+            )
+    else:  # zoo: the pod-scale scan body is always cohort-width
+        from repro.fed import round as fed_round
+
+        body_target = f"scan_body[{spec.task.name}]"
+        body, (carry, xs) = fed_round.scan_body_for_lint(
+            built.arch_config, built.round_spec, built.sampler, built.dataset
+        )
+        closed = jax.make_jaxpr(body)(carry, xs)
+        report.add(audit_dtypes(closed, target=body_target), f"dtype:{body_target}")
+        report.add(
+            audit_width(closed, n, target=body_target),
+            f"width:{body_target}(N={n})",
+        )
+        if compile_guard is True:
+            from repro.fed.round import build_fed_scan_segment
+            from repro.models import transformer
+
+            key = jax.random.PRNGKey(spec.execution.seed)
+            params = transformer.init_params(built.arch_config, key)
+            segment, make_state = build_fed_scan_segment(
+                built.arch_config, built.round_spec, built.sampler, built.dataset
+            )
+            state = make_state(
+                params, built.sampler.init(), key, probe_rounds * 3
+            )
+            seg_target = f"segment_runner[{spec.task.name}]"
+            report.add(
+                audit_compile_once(
+                    segment, state, probe_rounds, target=seg_target
+                ),
+                f"compile_once:{seg_target}",
+            )
+        if hlo is True:
+            text = jax.jit(body).lower(carry, xs).compile().as_text()
+            report.add(
+                audit_width_hlo(text, n, target=f"hlo:{body_target}"),
+                f"width_hlo:{body_target}(N={n})",
+            )
+    return report
+
+
+# ---------------------------------------------------------------------------
+# The sweep: registry x metric fidelity x execution mode
+# ---------------------------------------------------------------------------
+
+
+def sweep_registry(
+    *,
+    samplers: Iterable[str] | None = None,
+    n_clients: int = 13,
+    budget: int = 4,
+    rounds: int = 4,
+    fast: bool = False,
+    progress: Callable[[str], None] | None = None,
+) -> LintReport:
+    """Lint every registered sampler x oracle/deployable x compiled/reference
+    on the canonical simulation task — the CI gate.
+
+    ``n_clients=13`` is deliberately distinctive (prime, unequal to the
+    logreg dims 60/10 and the batch size) so the width auditor's client-axis
+    detection cannot collide with a model dimension.  ``fast=True`` skips
+    the compile-once and HLO passes (pure tracing; seconds instead of
+    minutes)."""
+    from repro.api import ExecutionSpec, ExperimentSpec, FederationSpec, SamplerSpec, TaskSpec
+    from repro.core.samplers import sampler_names
+
+    report = LintReport()
+    names = list(samplers) if samplers is not None else sampler_names()
+    for name in names:
+        kwargs = {"horizon": rounds} if name in ("kvib", "vrb") else {}
+        for oracle in (True, False):
+            for compiled in (True, False):
+                cell = (
+                    f"{name} x {'oracle' if oracle else 'deployable'} x "
+                    f"{'compiled' if compiled else 'reference'}"
+                )
+                if progress is not None:
+                    progress(cell)
+                spec = ExperimentSpec(
+                    task=TaskSpec(
+                        name="logreg",
+                        dataset="synthetic_classification",
+                        dataset_kwargs={
+                            "n_clients": n_clients,
+                            "total": 40 * n_clients,
+                            "seed": 0,
+                        },
+                    ),
+                    sampler=SamplerSpec(name=name, kwargs=kwargs),
+                    federation=FederationSpec(
+                        rounds=rounds, budget=budget, local_steps=1, batch_size=8
+                    ),
+                    execution=ExecutionSpec(
+                        compiled=compiled, oracle_metrics=oracle
+                    ),
+                )
+                sub = run_suite(
+                    spec,
+                    hlo=False if fast else None,
+                    compile_guard=False if fast else None,
+                )
+                prefixed = LintReport(
+                    findings=[
+                        dataclasses.replace(f, target=f"{cell}: {f.target}")
+                        for f in sub.findings
+                    ],
+                    checked=[f"{cell}: {c}" for c in sub.checked],
+                )
+                report.extend(prefixed)
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="Trace-invariant lint: width / scan-safety / dtype / "
+        "compile-once static analysis over the sampler registry and both "
+        "execution stacks.  Exits nonzero on any finding.",
+    )
+    ap.add_argument(
+        "--spec", default="",
+        help="lint ONE ExperimentSpec JSON file instead of the registry sweep",
+    )
+    ap.add_argument(
+        "--samplers", default="",
+        help="comma-separated sampler names to sweep (default: whole registry)",
+    )
+    ap.add_argument("--clients", type=int, default=13)
+    ap.add_argument("--budget", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument(
+        "--fast", action="store_true",
+        help="jaxpr passes only: skip the compile-once guard and the "
+        "post-SPMD HLO width audit (no XLA compilation)",
+    )
+    ap.add_argument(
+        "--quiet", action="store_true", help="suppress per-cell progress lines"
+    )
+    args = ap.parse_args(argv)
+
+    if args.spec:
+        from repro.api import ExperimentSpec
+
+        report = run_suite(ExperimentSpec.load(args.spec))
+    else:
+        progress = None if args.quiet else (lambda cell: print(f"lint {cell} ...", flush=True))
+        report = sweep_registry(
+            samplers=[s for s in args.samplers.split(",") if s] or None,
+            n_clients=args.clients,
+            budget=args.budget,
+            rounds=args.rounds,
+            fast=args.fast,
+            progress=progress,
+        )
+    print(report.render())
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,6 +21,16 @@ experiment.json`` / ``--dump-spec``), the checkpoint manifest fingerprint
 the benchmarks — "new scenario = new spec JSON".
 """
 from repro.api.runner import BuiltExperiment, build, restore_template, run
+
+
+def lint(spec, **kwargs):
+    """Statically lint a spec's traced program — width / scan-safety /
+    dtype / compile-once contracts — without training it.  Thin forwarder to
+    ``repro.analysis.lint.run_suite`` (imported lazily: the analysis package
+    is optional at run time); returns its ``LintReport``."""
+    from repro.analysis.lint import run_suite
+
+    return run_suite(spec, **kwargs)
 from repro.api.spec import (
     ExecutionSpec,
     ExperimentSpec,
@@ -43,6 +53,7 @@ __all__ = [
     "BuiltExperiment",
     "build",
     "run",
+    "lint",
     "restore_template",
     "register_task",
     "register_dataset",

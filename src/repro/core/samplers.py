@@ -45,11 +45,28 @@ the whole registry in tests:
 
 Any sampler obeying this contract can be preempted mid-horizon and resumed
 bit-exactly from ``Sampler.init()`` as the restore template.
+
+The dtype half of the contract: leaves must not be float64/complex128 (a
+silent promotion doubles checkpoint size and breaks cross-platform bitwise
+resume) and must not be weak-typed (numpy has no weak scalars, so a weak
+leaf changes its aval across a checkpoint round trip and forces a recompile
+on resume).  ``assert_serializable_state`` rejects both.
+
+Scan-safety contract
+--------------------
+
+``Sampler.scan_safe_methods`` names the methods that ride the compiled
+horizon's ``lax.scan`` body — ``probabilities`` / ``sample_from`` /
+``update`` — and therefore must trace abstractly: no data-dependent Python
+control flow, no host callbacks, static shapes only, and ``update`` must
+return a state with exactly the input state's avals.  ``abstract_state()``
+and ``abstract_draw()`` provide the ShapeDtypeStruct arguments the static
+checker (``repro.analysis.lint.audit_scan_safety``) traces them with.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import ClassVar, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -80,7 +97,15 @@ def assert_serializable_state(state) -> None:
 
     Raises ``TypeError`` if any pytree leaf is not a (jax or numpy) array —
     i.e. if a Python scalar was smuggled into a carry — and ``ValueError`` on
-    a leafless state (nothing to checkpoint means nothing survives resume)."""
+    a leafless state (nothing to checkpoint means nothing survives resume).
+
+    Also enforces the dtype half of the contract (module docstring): leaves
+    must not be float64/complex128 and must not be weak-typed — both change
+    the carry's avals across a checkpoint round trip (the dtype by doubling
+    storage and breaking bitwise resume, the weak type by being erased on
+    the numpy side), which the compile-once guard
+    (``repro.analysis.lint.audit_compile_once``) would report as a
+    resume-time recompile."""
     leaves = jax.tree_util.tree_leaves(state)
     if not leaves:
         raise ValueError("sampler state has no array leaves; nothing would survive a checkpoint round trip")
@@ -90,6 +115,21 @@ def assert_serializable_state(state) -> None:
                 f"sampler-state leaf {i} is {type(leaf).__name__}, not an array "
                 "— Python scalars are baked into traces as constants and "
                 "dropped from checkpoints (serializable-state contract)"
+            )
+        dtype = np.dtype(leaf.dtype)
+        if dtype in (np.dtype(np.float64), np.dtype(np.complex128)):
+            raise TypeError(
+                f"sampler-state leaf {i} has dtype {dtype.name} — 64-bit "
+                "float leaves double checkpoint size and break cross-platform "
+                "bitwise resume (serializable-state dtype contract; see "
+                "repro.analysis.lint audit_dtypes)"
+            )
+        if getattr(leaf, "weak_type", False):
+            raise TypeError(
+                f"sampler-state leaf {i} is weak-typed — weak types are "
+                "erased by checkpoint round trips (numpy has no weak "
+                "scalars), changing the carry avals and forcing a recompile "
+                "on resume (serializable-state dtype contract)"
             )
 
 
@@ -175,6 +215,31 @@ class Sampler:
     n: int
     budget: int
     procedure: str = "isp"  # "isp" | "rsp_wr" | "rsp_wor"
+
+    # The scan-safety contract (module docstring): these methods run inside
+    # the compiled horizon's scan body and must trace abstractly with static
+    # shapes, no host callbacks, and (for update) aval-stable state.  The
+    # static checker ``repro.analysis.lint.audit_scan_safety`` traces exactly
+    # this list; a subclass adding a scan-carried hook must extend it.
+    scan_safe_methods: ClassVar[tuple] = ("probabilities", "sample_from", "update")
+
+    def abstract_state(self):
+        """``init()``'s state as ShapeDtypeStructs (no arrays built) — the
+        trace argument for the scan-safety checker and restore templates."""
+        return jax.eval_shape(self.init)
+
+    def abstract_draw(self) -> SampleResult:
+        """A ``SampleResult`` of ShapeDtypeStructs per the documented field
+        contract — deliberately NOT derived by tracing ``sample`` (the
+        checker must be able to lint ``update`` even when sampling itself is
+        broken)."""
+        f32 = jnp.float32
+        return SampleResult(
+            mask=jax.ShapeDtypeStruct((self.n,), jnp.bool_),
+            counts=jax.ShapeDtypeStruct((self.n,), jnp.int32),
+            marginals=jax.ShapeDtypeStruct((self.n,), f32),
+            draw_probs=jax.ShapeDtypeStruct((self.n,), f32),
+        )
 
     # -- hooks ---------------------------------------------------------------
     def init(self) -> SamplerState:

@@ -1,7 +1,19 @@
 from repro.fed.client import local_update, update_norm
 from repro.fed.cohort import CohortSelection, select_cohort
-from repro.fed.round import RoundSpec, build_fed_scan, build_fed_scan_segment, build_round_step
-from repro.fed.server import FedConfig, History, build_segment_runner, run_federated
+from repro.fed.round import (
+    RoundSpec,
+    build_fed_scan,
+    build_fed_scan_segment,
+    build_round_step,
+    scan_body_for_lint,
+)
+from repro.fed.server import (
+    FedConfig,
+    History,
+    build_segment_runner,
+    round_body_for_lint,
+    run_federated,
+)
 from repro.fed.state import TrainState, run_segmented
 from repro.fed.tasks import Task, logistic_regression, mlp_classifier, tiny_lm
 
@@ -14,9 +26,11 @@ __all__ = [
     "build_fed_scan",
     "build_fed_scan_segment",
     "build_round_step",
+    "scan_body_for_lint",
     "FedConfig",
     "History",
     "build_segment_runner",
+    "round_body_for_lint",
     "run_federated",
     "TrainState",
     "run_segmented",

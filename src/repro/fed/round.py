@@ -47,6 +47,7 @@ __all__ = [
     "build_round_step",
     "build_fed_scan",
     "build_fed_scan_segment",
+    "scan_body_for_lint",
 ]
 
 
@@ -291,6 +292,30 @@ def _build_scan_body(cfg, spec, sampler, dataset, mesh, constrain):
         return (params, s_state), metrics
 
     return body
+
+
+def scan_body_for_lint(
+    cfg: ArchConfig,
+    spec: RoundSpec,
+    sampler,
+    dataset,
+    *,
+    mesh=None,
+    constrain=None,
+):
+    """Lintable handle on the pod-scale scan body: ``(body, (carry, xs))``.
+
+    ``carry``/``xs`` are ShapeDtypeStruct pytrees matching what
+    ``build_fed_scan``/``build_fed_scan_segment`` scan the body with — the
+    model parameters come from ``jax.eval_shape`` of ``transformer.
+    init_params``, so no weights are materialized and the static checkers in
+    ``repro.analysis.lint`` can trace the real round program for free."""
+    body = _build_scan_body(cfg, spec, sampler, dataset, mesh, constrain)
+    key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    params = jax.eval_shape(lambda k: transformer.init_params(cfg, k), key)
+    carry = (params, sampler.abstract_state())
+    xs = jax.eval_shape(lambda k: jnp.stack([k, k]), key)
+    return body, (carry, xs)
 
 
 def build_fed_scan_segment(

@@ -83,7 +83,13 @@ from repro.fed.state import (
 from repro.fed.tasks import Task
 from repro.optim.fedopt import FedAvgServer, ServerOptimizer
 
-__all__ = ["FedConfig", "History", "build_segment_runner", "run_federated"]
+__all__ = [
+    "FedConfig",
+    "History",
+    "build_segment_runner",
+    "round_body_for_lint",
+    "run_federated",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -323,6 +329,30 @@ def _build_round_body(task: Task, dataset, sampler: samplers.Sampler, cfg: FedCo
         return (params, opt_state, s_state), metrics
 
     return body
+
+
+def round_body_for_lint(
+    task: Task,
+    dataset,
+    sampler: samplers.Sampler,
+    cfg: FedConfig,
+    eval_data: tuple | None = None,
+):
+    """Lintable handle on the built round body: ``(body, (carry, xs))``.
+
+    ``carry``/``xs`` are ShapeDtypeStruct pytrees shaped exactly as the
+    compiled paths trace the body (``build_segment_runner``'s scan and the
+    reference loop's per-round jit) — no arrays are materialized, so the
+    static checkers in ``repro.analysis.lint`` can ``jax.make_jaxpr(body)``
+    the real program without touching data or devices."""
+    body = _build_round_body(task, dataset, sampler, cfg, eval_data)
+    key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    params = jax.eval_shape(task.init, key)
+    opt_state = jax.eval_shape(cfg.server_opt.init, params)
+    s_state = sampler.abstract_state()
+    carry = (params, opt_state, s_state)
+    xs = (jax.ShapeDtypeStruct((), jnp.int32), key, key)
+    return body, (carry, xs)
 
 
 def _materialize_history(metrics: dict, cfg: FedConfig, has_eval: bool) -> History:

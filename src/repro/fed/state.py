@@ -161,6 +161,19 @@ def make_segment_fn(
             key=key,
         )
 
+    # Lintable handles for the static checkers (repro.analysis.lint):
+    # audit_compile_once reads the declared donation setup from here and the
+    # jit cache counter from the PjitFunction itself, so the compile-once /
+    # donation contract is checkable without re-deriving how the segment was
+    # built.
+    segment._lint = {
+        "body": body,
+        "derive_step": derive_step,
+        "with_opt_state": with_opt_state,
+        "with_round_index": with_round_index,
+        "donate": donate,
+        "donate_argnums": donate_argnums,
+    }
     return segment
 
 

@@ -118,6 +118,13 @@ def make_parser() -> argparse.ArgumentParser:
         help="print the ExperimentSpec JSON these flags denote and exit "
         "without training",
     )
+    ap.add_argument(
+        "--lint", action="store_true",
+        help="statically lint the spec before training "
+        "(repro.analysis.lint.run_suite: sampler scan-safety, round-body "
+        "dtype hygiene, cohort-width) and abort with exit code 1 on any "
+        "finding — no training happens on a spec that fails its contracts",
+    )
     return ap
 
 
@@ -305,6 +312,14 @@ def main(argv=None) -> None:
     if args.dump_spec:
         print(spec.to_json())
         return
+
+    if args.lint:
+        from repro.analysis.lint import run_suite
+
+        report = run_suite(spec)
+        print(report.render(), flush=True)
+        if not report.ok:
+            raise SystemExit(1)
 
     if args.resume and not spec.execution.compiled:
         ap.error(

@@ -129,6 +129,30 @@ def test_fed_scan_runs_cohort_sequential(tiny_setup):
         )
 
 
+def test_scan_body_is_cohort_width_and_f32_by_audit():
+    """The pod-scale scan body honors the cohort-width and dtype contracts,
+    proven by the jaxpr auditors (repro.analysis.lint) on the abstractly
+    traced body — the structural claim in build_fed_scan's docstring ('every
+    buffer with a parameter axis is C-wide'), machine-checked instead of
+    string-matched.  The client count is 13 (prime, distinct from every
+    model/batch dimension) so the auditor's client-axis detection cannot
+    collide with d_model/d_head/seq/vocab axes."""
+    from repro.analysis.lint import audit_dtypes, audit_width
+    from repro.fed.round import scan_body_for_lint
+
+    cfg = get_config("smollm-360m").reduced(n_layers=2, d_model=64, d_ff=128, vocab=128)
+    ds = synthetic_tokens(n_clients=13, seq_len=16, vocab=cfg.vocab, total_seqs=256, seed=3)
+    spec = RoundSpec(cohort=3, local_steps=2, local_lr=0.05, local_batch=2)
+    sampler = make_sampler("kvib", n=ds.n_clients, budget=2, horizon=4)
+
+    body, (carry, xs) = scan_body_for_lint(cfg, spec, sampler, ds)
+    closed = jax.make_jaxpr(body)(carry, xs)
+    width = audit_width(closed, ds.n_clients)
+    assert width == [], "\n".join(f.render() for f in width)
+    dtypes = audit_dtypes(closed, target="scan_body")
+    assert dtypes == [], "\n".join(f.render() for f in dtypes)
+
+
 @pytest.mark.slow  # fresh interpreter: forced 2-device CPU mesh + model compile
 def test_compiled_scan_on_two_device_mesh_subprocess():
     """Acceptance: the compiled scan drives a fed/round.py round body on a

@@ -33,6 +33,7 @@ def test_cohort_width_entry_points_exported():
     repro.checkpoint, and the declarative spec front door via repro.api
     (whose names are also re-exported from top-level repro)."""
     import repro
+    import repro.analysis as analysis
     import repro.api as api
     import repro.checkpoint as checkpoint
     import repro.core as core
@@ -44,13 +45,17 @@ def test_cohort_width_entry_points_exported():
                 "assert_serializable_state", "sampler_names")),
         (fed, ("RoundSpec", "build_fed_scan", "build_fed_scan_segment",
                "build_round_step", "build_segment_runner", "run_segmented",
-               "TrainState")),
+               "TrainState", "round_body_for_lint", "scan_body_for_lint")),
         (kernels, ("fused_multi_weighted_agg", "fused_cohort_agg_and_error")),
         (checkpoint, ("save_checkpoint", "restore_checkpoint",
                       "CheckpointManager", "config_fingerprint")),
         (api, ("ExperimentSpec", "TaskSpec", "SamplerSpec", "FederationSpec",
                "ExecutionSpec", "run", "build", "restore_template",
-               "register_task", "register_dataset")),
+               "register_task", "register_dataset", "lint")),
+        (analysis, ("analyze_hlo", "dtype_bytes", "UnknownDtypeError",
+                    "Finding", "LintReport", "audit_width", "audit_width_hlo",
+                    "audit_scan_safety", "audit_dtypes", "audit_compile_once",
+                    "run_suite", "sweep_registry")),
     ):
         for name in names:
             assert name in pkg.__all__, f"{pkg.__name__}.__all__ missing {name}"
@@ -71,6 +76,34 @@ def test_cohort_width_entry_points_exported():
     mgr_mod = importlib.import_module("repro.checkpoint.manager")
     assert "CheckpointManager" in mgr_mod.__all__ and "config_fingerprint" in mgr_mod.__all__
     assert "assert_serializable_state" in samplers.__all__
+    # the lint module itself is reachable lazily (PEP 562) but is a module,
+    # not a callable — membership only
+    assert "lint" in analysis.__all__
+    import types
+
+    assert isinstance(analysis.lint, types.ModuleType)
+
+
+@pytest.mark.parametrize("name", samplers.sampler_names())
+def test_serializable_state_contract_registry_sweep(name):
+    """Every registered sampler's init() state passes the serializable-state
+    contract, and the contract's dtype half rejects f64 and weak-typed leaves
+    (both change carry avals across a checkpoint round trip — the failure the
+    compile-once lint guard would otherwise catch only at resume)."""
+    import dataclasses
+
+    n = 12
+    st = samplers.make_sampler(name, n=n, budget=4).init()
+    samplers.assert_serializable_state(st)
+
+    wide = dataclasses.replace(st, stats=np.zeros(n, np.float64))
+    with pytest.raises(TypeError, match="float64"):
+        samplers.assert_serializable_state(wide)
+
+    weak = dataclasses.replace(st, t=jnp.asarray(0.0))
+    assert weak.t.weak_type
+    with pytest.raises(TypeError, match="weak-typed"):
+        samplers.assert_serializable_state(weak)
 
 
 @pytest.mark.parametrize("name", ALL_SAMPLERS)
