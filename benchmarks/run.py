@@ -399,6 +399,85 @@ def bench_fed_cohort_width() -> None:
 
 
 # ---------------------------------------------------------------------------
+# Table: million-client sampler round — per-client cost flat in N
+# ---------------------------------------------------------------------------
+
+
+def bench_fed_sampler_scale() -> None:
+    """The tentpole claim of the sharded sampler stack: at fixed budget K the
+    full sampler round — sharded water-filling solve, Poisson draw, feedback
+    update — costs O(N/S) per device with a CONSTANT per-client price.
+
+    Times the jitted sampler round at N = 10^4..10^6 (no model — the sampler
+    is the only N-sized object, which is exactly the point) and records the
+    compiled round's live bytes.  The gate ratios normalize per client:
+    us/client and bytes/client from N=10^4 to N=10^6 must stay <= 1.5x
+    (lower-is-better flatness, ``benchmarks/check_regression.py``).  CPU CI
+    runs the degenerate S=1 mesh; per-client normalization makes the gate
+    mesh-size independent — on an S-shard mesh every shard holds N/S clients
+    at the same per-client price."""
+    from repro.core import make_sampler
+    from repro.launch.mesh import ShardSpec
+
+    k = 64
+    entries = []
+    for n in (10_000, 100_000, 1_000_000):
+        sampler = dataclasses.replace(
+            make_sampler("kvib", n=n, budget=k, horizon=100),
+            shard=ShardSpec(),
+        )
+
+        @jax.jit
+        def sampler_round(state, key, sampler=sampler):
+            p = sampler.probabilities(state)
+            draw = sampler.sample_from(p, key)
+            return sampler.update(state, draw, draw.mask * p)
+
+        state = sampler.init()
+        key = jax.random.PRNGKey(0)
+        reps = 3 if n >= 1_000_000 else 10
+        us = _timeit(sampler_round, state, key, reps=reps, warmup=2)
+        entry = {
+            "n": n, "budget": k,
+            "us": us, "us_per_client": us / n,
+        }
+        try:
+            ma = sampler_round.lower(state, key).compile().memory_analysis()
+            live = int(
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes
+            )
+            entry["live_bytes"] = live
+            entry["bytes_per_client"] = live / n
+        except Exception:
+            entry["live_bytes"] = None
+        row(f"fed_sampler_scale_n{n}", us,
+            f"K={k} sharded sampler round (solve+draw+update)")
+        entries.append(entry)
+    time_flat = entries[-1]["us_per_client"] / entries[0]["us_per_client"]
+    ratios = {"per_client_us_n1e6_over_n1e4": time_flat}
+    derived = f"us/client N=1e4->1e6: {time_flat:.2f}x"
+    if entries[0].get("live_bytes") and entries[-1].get("live_bytes"):
+        bytes_flat = (
+            entries[-1]["bytes_per_client"] / entries[0]["bytes_per_client"]
+        )
+        ratios["per_client_bytes_n1e6_over_n1e4"] = bytes_flat
+        derived += f" (bytes/client: {bytes_flat:.2f}x)"
+    row("fed_sampler_scale_flatness", 0, derived)
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "BENCH_fed_sampler_scale.json"), "w") as f:
+        json.dump(
+            {
+                "bench": "fed_sampler_scale",
+                "entries": entries,
+                # regression-gate ratios: LOWER is better
+                "ratios": ratios,
+            },
+            f, indent=2,
+        )
+
+
+# ---------------------------------------------------------------------------
 # Paper figures from experiment artifacts
 # ---------------------------------------------------------------------------
 
@@ -493,6 +572,7 @@ BENCHES = {
     "fed_scan_segmented": bench_fed_scan_segmented,
     "fed_round_cohort": bench_fed_round_cohort,
     "fed_cohort_width": bench_fed_cohort_width,
+    "fed_sampler_scale": bench_fed_sampler_scale,
     "fig2": table_synthetic,
     "fig3b": table_budget,
     "fig4": table_femnist,

@@ -60,6 +60,7 @@ __all__ = [
     "iter_eqns",
     "audit_width",
     "audit_width_hlo",
+    "audit_replicated_clients",
     "audit_scan_safety",
     "audit_dtypes",
     "audit_compile_once",
@@ -315,6 +316,112 @@ def audit_width(
                     provenance=_source_of(eqn, path),
                 )
     return list(grouped.values())
+
+
+def audit_replicated_clients(
+    jaxpr,
+    n: int,
+    *,
+    target: str = "",
+    check_nd: bool = True,
+    max_unconstrained: int = 80,
+    allow: Iterable[tuple] = (),
+) -> list:
+    """Per-shard width audit for a round body built with a mesh-sharded
+    sampler (the million-client contract: nothing replicated scales O(N)
+    per device).
+
+    Equations inside ``shard_map`` sub-jaxprs operate on (N/S,)-local blocks
+    — that is the sharded solve doing its job — and are exempt.  Outside
+    them the audit enforces two rules:
+
+    * ``check_nd``: no equation introduces a replicated O(N*D) float — the
+      ``audit_width`` rule re-applied after excluding the shard-local
+      subtrees (oracle bodies hold documented (N, D) diagnostics and set
+      ``check_nd=False``);
+    * the count of replicated (N,)-f32 temporaries that never flow into a
+      ``sharding_constraint`` stays at or under ``max_unconstrained``.  The
+      documented per-round vector set — probability algebra, draw mask,
+      estimator weights, feedback scatter — measures ~70 such equations
+      across the whole sampler registry, and the count is a property of the
+      PROGRAM, constant in N; the ceiling is a regression tripwire that
+      fires when an edit starts materializing extra per-client temporaries
+      (e.g. an (N,)-buffer per loop iteration) instead of keeping them
+      shard-local.
+    """
+    allow = frozenset(tuple(s) for s in allow)
+    constrained = set()
+    for eqn, _path in iter_eqns(jaxpr):
+        if eqn.primitive.name == "sharding_constraint":
+            constrained.update(id(v) for v in eqn.invars)
+
+    exempt = set()
+    top = _as_jaxpr(jaxpr)
+    exempt.update(id(v) for v in getattr(top, "constvars", ()))
+    exempt.update(id(v) for v in top.invars)
+
+    findings: list = []
+    n_unconstrained = 0
+    worst: dict = {}
+    for eqn, path in iter_eqns(jaxpr):
+        if "shard_map" in path or eqn.primitive.name in (
+            "sharding_constraint",
+            "shard_map",
+        ):
+            continue
+        if check_nd and not any(
+            id(v) not in exempt and _offends_width(_aval_of(v), n, allow)
+            for v in eqn.invars
+        ):
+            for var in eqn.outvars:
+                aval = _aval_of(var)
+                if _offends_width(aval, n, allow):
+                    findings.append(
+                        Finding(
+                            check="replicated_clients",
+                            target=target,
+                            message=(
+                                f"replicated O(N*D) float with N={n} outside "
+                                "every shard_map (sharded-sampler contract: "
+                                "per-client blocks live shard-local)"
+                            ),
+                            op=eqn.primitive.name,
+                            shape=_shape_str(aval),
+                            provenance=_source_of(eqn, path),
+                        )
+                    )
+        for var in eqn.outvars:
+            aval = _aval_of(var)
+            if (
+                aval is not None
+                and hasattr(aval, "shape")
+                and tuple(aval.shape) == (n,)
+                and _is_float(aval)
+                and id(var) not in constrained
+            ):
+                n_unconstrained += 1
+                worst[eqn.primitive.name] = worst.get(eqn.primitive.name, 0) + 1
+    if n_unconstrained > max_unconstrained:
+        top_ops = ", ".join(
+            f"{op} x{c}"
+            for op, c in sorted(worst.items(), key=lambda kv: -kv[1])[:5]
+        )
+        findings.append(
+            Finding(
+                check="replicated_clients",
+                target=target,
+                message=(
+                    f"{n_unconstrained} replicated (N,)-float temporaries "
+                    f"never reach a sharding_constraint (ceiling "
+                    f"{max_unconstrained}; top ops: {top_ops}) — the round "
+                    "body is growing per-client material beyond the "
+                    "documented sampler-state set"
+                ),
+                op="*",
+                shape=f"f32[{n}]",
+            )
+        )
+    return findings
 
 
 # ---------------------------------------------------------------------------
@@ -798,6 +905,13 @@ def run_suite(
                 audit_width(closed, n, target=body_target),
                 f"width:{body_target}(N={n})",
             )
+        if built.sampler.shard is not None:
+            report.add(
+                audit_replicated_clients(
+                    closed, n, target=body_target, check_nd=width_applies
+                ),
+                f"replicated_clients:{body_target}(N={n})",
+            )
         if cfg.compiled and compile_guard is not False:
             probe_cfg = _probe_fed_config(cfg, probe_rounds, 2)
             segment, state = fed_server.build_segment_runner(
@@ -829,6 +943,11 @@ def run_suite(
             audit_width(closed, n, target=body_target),
             f"width:{body_target}(N={n})",
         )
+        if built.sampler.shard is not None:
+            report.add(
+                audit_replicated_clients(closed, n, target=body_target),
+                f"replicated_clients:{body_target}(N={n})",
+            )
         if compile_guard is True:
             from repro.fed.round import build_fed_scan_segment
             from repro.models import transformer
@@ -887,10 +1006,14 @@ def sweep_registry(
     for name in names:
         kwargs = {"horizon": rounds} if name in ("kvib", "vrb") else {}
         for oracle in (True, False):
-            for compiled in (True, False):
+            # The third execution mode is the sharded-sampler compiled path:
+            # (compiled, sampler_axis).  Reference x sharded adds nothing the
+            # compiled cell doesn't trace (same body), so it is not swept.
+            for compiled, axis in ((True, None), (False, None), (True, "data")):
                 cell = (
                     f"{name} x {'oracle' if oracle else 'deployable'} x "
                     f"{'compiled' if compiled else 'reference'}"
+                    + (" x sharded" if axis else "")
                 )
                 if progress is not None:
                     progress(cell)
@@ -909,7 +1032,7 @@ def sweep_registry(
                         rounds=rounds, budget=budget, local_steps=1, batch_size=8
                     ),
                     execution=ExecutionSpec(
-                        compiled=compiled, oracle_metrics=oracle
+                        compiled=compiled, oracle_metrics=oracle, sampler_axis=axis
                     ),
                 )
                 sub = run_suite(

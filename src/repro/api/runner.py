@@ -80,6 +80,19 @@ class BuiltExperiment:
     round_spec: Any = None  # kind="zoo"
 
 
+def _sampler_shard(spec: ExperimentSpec):
+    """The ``ShardSpec`` that ``spec.execution.sampler_axis`` denotes (or
+    ``None``): the sampler's (N,)-axis layout over the run's mesh — the same
+    mesh ``_make_mesh`` hands the zoo stack, so one ``sampler_axis`` switch
+    shards the solve/draw/update on both stacks."""
+    axis = spec.execution.sampler_axis
+    if axis is None:
+        return None
+    from repro.launch.mesh import ShardSpec
+
+    return ShardSpec.from_mesh(_make_mesh(spec), axis=axis)
+
+
 def _build_task(spec: ExperimentSpec) -> BuiltExperiment:
     tasks = _task_registry()
     if spec.task.name not in tasks:
@@ -103,6 +116,7 @@ def _build_task(spec: ExperimentSpec) -> BuiltExperiment:
         spec.sampler.name,
         n=ds.n_clients,
         budget=spec.federation.budget,
+        shard=_sampler_shard(spec),
         **dict(spec.sampler.kwargs),
     )
     return BuiltExperiment(
@@ -146,6 +160,7 @@ def _build_zoo(spec: ExperimentSpec) -> BuiltExperiment:
         spec.sampler.name,
         n=ds.n_clients,
         budget=spec.federation.budget,
+        shard=_sampler_shard(spec),
         **dict(spec.sampler.kwargs),
     )
     fed = spec.federation
@@ -269,6 +284,10 @@ def run(
         built = build(spec)
     elif not _specs_compatible(built.spec, spec):
         raise ValueError("run(built=...) got a BuiltExperiment from a different spec")
+    if ckpt_manager is not None and getattr(ckpt_manager, "layout", None) is None:
+        # Record the run's sampler (N,)-axis layout in the manifest
+        # (provenance only — restore never validates it).
+        ckpt_manager.layout = built.sampler.shard
     if built.kind == "zoo":
         if eval_data is not None:
             raise ValueError(

@@ -284,7 +284,18 @@ class ExecutionSpec:
 
     ``mesh_shape`` (zoo stack only): explicit host-mesh shape, e.g.
     ``(2, 1)`` for 2-way data parallelism; ``None`` uses
-    ``repro.launch.mesh.make_host_mesh()``'s device-derived default."""
+    ``repro.launch.mesh.make_host_mesh()``'s device-derived default.
+
+    ``sampler_axis``: name of the mesh axis to shard every sampler (N,)-axis
+    tensor over — the million-client switch.  ``None`` (default) keeps the
+    sampler replicated; setting it makes ``repro.api.build`` hand the
+    sampler a ``repro.launch.mesh.ShardSpec`` so the budget solve, the
+    draw, and the feedback update all run shard-local on BOTH execution
+    stacks (see ``core/solver.py``'s sharded-solve contract).
+
+    ``score_history_host_offload``: shrink the oracle (T, N) score-history
+    buffer to a per-segment device ring drained to host every ``ckpt_every``
+    rounds (simulation stack; requires ``ckpt_every > 0``)."""
 
     seed: int = 0
     compiled: bool = True
@@ -293,6 +304,8 @@ class ExecutionSpec:
     track_scores: bool = True
     ckpt_every: int = 0
     mesh_shape: tuple | None = None
+    sampler_axis: str | None = None
+    score_history_host_offload: bool = False
 
     def __post_init__(self):
         if self.mesh_shape is not None:
@@ -390,6 +403,7 @@ class ExperimentSpec:
             exact_oracle_equiv=ex.exact_oracle_equiv,
             track_scores=ex.track_scores,
             ckpt_every=ex.ckpt_every,
+            score_history_host_offload=ex.score_history_host_offload,
         )
 
     def round_spec(self):

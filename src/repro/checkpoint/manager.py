@@ -88,6 +88,7 @@ class CheckpointManager:
         keep_last: int = 3,
         fingerprint: str | None = None,
         name: str = "state",
+        layout=None,
     ):
         if keep_last < 1:
             raise ValueError(f"keep_last must be >= 1, got {keep_last}")
@@ -95,6 +96,12 @@ class CheckpointManager:
         self.keep_last = int(keep_last)
         self.fingerprint = fingerprint
         self.name = name
+        # Optional repro.launch.mesh.ShardSpec describing the saving run's
+        # sampler (N,)-axis layout.  Recorded in the manifest as PROVENANCE,
+        # never validated on restore: checkpoints round-trip through host
+        # numpy, so a restoring process lays the arrays out per its OWN
+        # ShardSpec — resuming onto a different mesh shape is legal.
+        self.layout = layout
 
     # -- paths ---------------------------------------------------------------
     @property
@@ -139,6 +146,9 @@ class CheckpointManager:
             "steps": retained,
             "treedef_sha256": _treedef_hash(state),
             "config_fingerprint": self.fingerprint,
+            "shard_layout": (
+                self.layout.to_manifest() if self.layout is not None else None
+            ),
             "versions": {
                 "jax": jax.__version__,
                 "numpy": np.__version__,

@@ -62,6 +62,22 @@ control flow, no host callbacks, static shapes only, and ``update`` must
 return a state with exactly the input state's avals.  ``abstract_state()``
 and ``abstract_draw()`` provide the ShapeDtypeStruct arguments the static
 checker (``repro.analysis.lint.audit_scan_safety``) traces them with.
+
+Sharded (N,)-axis contract
+--------------------------
+
+With ``shard=ShardSpec(...)`` every (N,)-shaped quantity a sampler touches —
+probabilities, draw fields, cumulative statistics — is pinned to the spec's
+mesh axis via in-trace sharding constraints (``shard_constrain``), and the
+water-filling solve runs shard-locally (``solver.isp_probabilities(...,
+shard=...)``): nothing replicated scales O(N) per device.  Two rules keep
+this compatible with the serializable-state and compile-once contracts:
+
+* constraints apply ONLY under a trace — eager values (``init()``, restored
+  checkpoints) stay uncommitted, so the compiled segment runner controls
+  placement at its own boundary (``fed.state.make_segment_fn``);
+* ``abstract_state()`` annotates (N,)-leaf avals with the NamedSharding so
+  the lint auditors (and restore templates) see the sharded layout.
 """
 from __future__ import annotations
 
@@ -73,6 +89,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import solver
+from repro.launch.mesh import ShardSpec
 
 __all__ = [
     "SampleResult",
@@ -215,6 +232,7 @@ class Sampler:
     n: int
     budget: int
     procedure: str = "isp"  # "isp" | "rsp_wr" | "rsp_wor"
+    shard: ShardSpec | None = None  # (N,)-axis mesh layout (module docstring)
 
     # The scan-safety contract (module docstring): these methods run inside
     # the compiled horizon's scan body and must trace abstractly with static
@@ -223,10 +241,44 @@ class Sampler:
     # this list; a subclass adding a scan-carried hook must extend it.
     scan_safe_methods: ClassVar[tuple] = ("probabilities", "sample_from", "update")
 
+    def shard_constrain(self, x: jax.Array) -> jax.Array:
+        """Pin a leading-(N,) value to the sampler's client-shard layout.
+
+        Identity when unsharded — and identity on CONCRETE arrays even when
+        sharded: an eager constraint would commit the array (jit input
+        placement then differs between fresh and carried state, costing a
+        recompile per segment), so placement of at-rest state belongs to the
+        segment runner's boundary, not here."""
+        if self.shard is None or not isinstance(x, jax.core.Tracer):
+            return x
+        return jax.lax.with_sharding_constraint(x, self.shard.named_sharding())
+
+    def shard_state(self, state: SamplerState) -> SamplerState:
+        """``shard_constrain`` over a state's (N,) leaves (t stays scalar)."""
+        if self.shard is None:
+            return state
+        return SamplerState(
+            stats=self.shard_constrain(state.stats),
+            aux=self.shard_constrain(state.aux),
+            t=state.t,
+        )
+
     def abstract_state(self):
         """``init()``'s state as ShapeDtypeStructs (no arrays built) — the
-        trace argument for the scan-safety checker and restore templates."""
-        return jax.eval_shape(self.init)
+        trace argument for the scan-safety checker and restore templates.
+        With ``shard`` set, (N,)-leading leaves carry the NamedSharding so
+        auditors see the sharded avals."""
+        st = jax.eval_shape(self.init)
+        if self.shard is None:
+            return st
+        ns = self.shard.named_sharding()
+
+        def annotate(leaf):
+            if leaf.ndim >= 1 and leaf.shape[0] == self.n:
+                return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=ns)
+            return leaf
+
+        return jax.tree_util.tree_map(annotate, st)
 
     def abstract_draw(self) -> SampleResult:
         """A ``SampleResult`` of ShapeDtypeStructs per the documented field
@@ -243,6 +295,8 @@ class Sampler:
 
     # -- hooks ---------------------------------------------------------------
     def init(self) -> SamplerState:
+        # Deliberately NOT shard-constrained: init is eager and at-rest state
+        # stays uncommitted (sharded-axis contract, module docstring).
         return SamplerState(
             stats=jnp.zeros((self.n,), jnp.float32),
             aux=jnp.zeros((self.n,), jnp.float32),
@@ -251,7 +305,7 @@ class Sampler:
 
     def probabilities(self, state: SamplerState) -> jax.Array:
         """Marginal inclusion probabilities (sum == budget for ISP)."""
-        return jnp.full((self.n,), self.budget / self.n)
+        return self.shard_constrain(jnp.full((self.n,), self.budget / self.n))
 
     def sample_from(self, probs: jax.Array, key: jax.Array) -> SampleResult:
         """Draw a cohort from an already-solved probability vector.
@@ -260,13 +314,18 @@ class Sampler:
         in particular the compiled server loop — compute p~ exactly once per
         round and reuse it for both the draw and the regret diagnostics.
         """
+        probs = self.shard_constrain(probs)
         if self.procedure == "isp":
-            return _isp_draw(key, probs)
-        if self.procedure == "rsp_wr":
-            return _rsp_wr_draw(
+            res = _isp_draw(key, probs)
+        elif self.procedure == "rsp_wr":
+            res = _rsp_wr_draw(
                 key, probs / jnp.maximum(jnp.sum(probs), 1e-30), self.budget
             )
-        return _rsp_wor_uniform_draw(key, self.n, self.budget)
+        else:
+            res = _rsp_wor_uniform_draw(key, self.n, self.budget)
+        if self.shard is None:
+            return res
+        return SampleResult(*(self.shard_constrain(f) for f in res))
 
     def sample(self, state: SamplerState, key: jax.Array) -> SampleResult:
         return self.sample_from(self.probabilities(state), key)
@@ -274,7 +333,7 @@ class Sampler:
     def update(
         self, state: SamplerState, draw: SampleResult, feedback: jax.Array
     ) -> SamplerState:
-        return dataclasses.replace(state, t=state.t + 1)
+        return self.shard_state(dataclasses.replace(state, t=state.t + 1))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -321,9 +380,13 @@ class KVib(Sampler):
 
     def probabilities(self, state: SamplerState) -> jax.Array:
         gamma = jnp.maximum(state.aux[0], 1e-12)
-        scores = jnp.sqrt(state.stats + gamma)
-        p = solver.isp_probabilities(scores, self.budget, p_min=self.p_min)
-        return solver.mix_probabilities(p, self._theta(), self.budget)
+        scores = jnp.sqrt(self.shard_constrain(state.stats) + gamma)
+        p = solver.isp_probabilities(
+            scores, self.budget, p_min=self.p_min, shard=self.shard
+        )
+        return self.shard_constrain(
+            solver.mix_probabilities(p, self._theta(), self.budget)
+        )
 
     def update(
         self, state: SamplerState, draw: SampleResult, feedback: jax.Array
@@ -342,7 +405,7 @@ class KVib(Sampler):
             )
             gamma_auto = g_est**2 * self.n / (self._theta() * self.budget)
             aux = jnp.where(state.t == 0, jnp.full_like(aux, gamma_auto), aux)
-        return SamplerState(stats=stats, aux=aux, t=state.t + 1)
+        return self.shard_state(SamplerState(stats=stats, aux=aux, t=state.t + 1))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -370,10 +433,10 @@ class Vrb(Sampler):
 
     def probabilities(self, state: SamplerState) -> jax.Array:
         gamma = jnp.maximum(state.aux[0], 1e-12)
-        w = jnp.sqrt(state.stats + gamma)
+        w = jnp.sqrt(self.shard_constrain(state.stats) + gamma)
         p = w / jnp.maximum(jnp.sum(w), 1e-30)
         theta = self._theta()
-        return (1.0 - theta) * p + theta / self.n
+        return self.shard_constrain((1.0 - theta) * p + theta / self.n)
 
     def update(
         self, state: SamplerState, draw: SampleResult, feedback: jax.Array
@@ -390,7 +453,7 @@ class Vrb(Sampler):
             )
             gamma_auto = g_est**2 * self.n / jnp.maximum(self._theta(), 1e-6)
             aux = jnp.where(state.t == 0, jnp.full_like(aux, gamma_auto), aux)
-        return SamplerState(stats=stats, aux=aux, t=state.t + 1)
+        return self.shard_state(SamplerState(stats=stats, aux=aux, t=state.t + 1))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -406,10 +469,10 @@ class Mabs(Sampler):
     theta: float = 0.1
 
     def probabilities(self, state: SamplerState) -> jax.Array:
-        logw = state.stats - jnp.max(state.stats)
+        logw = self.shard_constrain(state.stats) - jnp.max(state.stats)
         w = jnp.exp(logw)
         p = w / jnp.maximum(jnp.sum(w), 1e-30)
-        return (1.0 - self.theta) * p + self.theta / self.n
+        return self.shard_constrain((1.0 - self.theta) * p + self.theta / self.n)
 
     def update(
         self, state: SamplerState, draw: SampleResult, feedback: jax.Array
@@ -420,7 +483,7 @@ class Mabs(Sampler):
         scale = jnp.maximum(jnp.max(jnp.where(draw.mask, fb2, 0.0)), 1e-30)
         reward = draw.counts.astype(feedback.dtype) * (fb2 / scale) / q
         stats = state.stats + self.eta * reward / jnp.maximum(self.budget, 1) / self.n
-        return SamplerState(stats=stats, aux=state.aux, t=state.t + 1)
+        return self.shard_state(SamplerState(stats=stats, aux=state.aux, t=state.t + 1))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -451,14 +514,14 @@ class Avare(Sampler):
         p = opt / jnp.maximum(jnp.sum(opt), 1e-30)
         p_min = self.p_min_frac / self.n
         p = jnp.maximum(p, p_min)
-        return p / jnp.sum(p)
+        return self.shard_constrain(p / jnp.sum(p))
 
     def update(
         self, state: SamplerState, draw: SampleResult, feedback: jax.Array
     ) -> SamplerState:
         # Latest-value estimate for sampled clients (constant stepsize delta=1).
         aux = jnp.where(draw.mask, feedback, state.aux)
-        return SamplerState(stats=state.stats, aux=aux, t=state.t + 1)
+        return self.shard_state(SamplerState(stats=state.stats, aux=aux, t=state.t + 1))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -473,12 +536,14 @@ class OptimalISP(Sampler):
     def update(
         self, state: SamplerState, draw: SampleResult, feedback: jax.Array
     ) -> SamplerState:
-        return SamplerState(stats=feedback, aux=state.aux, t=state.t + 1)
+        return self.shard_state(SamplerState(stats=feedback, aux=state.aux, t=state.t + 1))
 
     def probabilities(self, state: SamplerState) -> jax.Array:
         has_fb = jnp.any(state.stats > 0)
-        p_opt = solver.isp_probabilities(state.stats, self.budget)
-        return jnp.where(has_fb, p_opt, jnp.full((self.n,), self.budget / self.n))
+        p_opt = solver.isp_probabilities(state.stats, self.budget, shard=self.shard)
+        return self.shard_constrain(
+            jnp.where(has_fb, p_opt, jnp.full((self.n,), self.budget / self.n))
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -505,7 +570,7 @@ class Osmd(Sampler):
         )
 
     def probabilities(self, state: SamplerState) -> jax.Array:
-        return state.stats
+        return self.shard_constrain(state.stats)
 
     def update(
         self, state: SamplerState, draw: SampleResult, feedback: jax.Array
@@ -522,7 +587,7 @@ class Osmd(Sampler):
         floor = self.p_min_frac / self.n
         p_new = jnp.maximum(p_new, floor)
         p_new = p_new / jnp.sum(p_new)
-        return SamplerState(stats=p_new, aux=state.aux, t=state.t + 1)
+        return self.shard_state(SamplerState(stats=p_new, aux=state.aux, t=state.t + 1))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -565,10 +630,12 @@ class ClusteredKVib(Sampler):
 
     def probabilities(self, state: SamplerState) -> jax.Array:
         gamma = jnp.maximum(state.aux[0], 1e-12)
-        pooled = self._cluster_mean_stats(state.stats)
+        pooled = self._cluster_mean_stats(self.shard_constrain(state.stats))
         scores = jnp.sqrt(pooled + gamma)
-        p = solver.isp_probabilities(scores, self.budget)
-        return solver.mix_probabilities(p, self._theta(), self.budget)
+        p = solver.isp_probabilities(scores, self.budget, shard=self.shard)
+        return self.shard_constrain(
+            solver.mix_probabilities(p, self._theta(), self.budget)
+        )
 
     def update(
         self, state: SamplerState, draw: SampleResult, feedback: jax.Array
@@ -584,7 +651,7 @@ class ClusteredKVib(Sampler):
             )
             gamma_auto = g_est**2 * self.n / (self._theta() * self.budget)
             aux = jnp.where(state.t == 0, jnp.full_like(aux, gamma_auto), aux)
-        return SamplerState(stats=stats, aux=aux, t=state.t + 1)
+        return self.shard_state(SamplerState(stats=stats, aux=aux, t=state.t + 1))
 
 
 _REGISTRY = {

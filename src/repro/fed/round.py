@@ -38,7 +38,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.fed.cohort import select_cohort, weighted_delta_sum
-from repro.fed.state import TrainState, init_metric_buffers, make_segment_fn
+from repro.fed.state import (
+    TrainState,
+    build_placement,
+    init_metric_buffers,
+    make_segment_fn,
+)
 from repro.models import transformer
 from repro.models.common import ArchConfig
 
@@ -279,9 +284,13 @@ def _build_scan_body(cfg, spec, sampler, dataset, mesh, constrain):
         )
         tokens, targets = gather_cohort(sel, k_data)
         params, norms, loss = round_step(params, tokens, targets, sel.weights)
-        # Sampler feedback: (N,)-vector scatter of the (C,) cohort norms.
-        fb = jnp.zeros((n,), jnp.float32).at[sel.ids].add(
-            jnp.where(sel.valid, lam[sel.ids] * norms, 0.0)
+        # Sampler feedback: (N,)-vector scatter of the (C,) cohort norms,
+        # constrained back onto the sampler's (N,)-shard layout so the
+        # scatter result never materializes replicated at scale.
+        fb = sampler.shard_constrain(
+            jnp.zeros((n,), jnp.float32).at[sel.ids].add(
+                jnp.where(sel.valid, lam[sel.ids] * norms, 0.0)
+            )
         )
         s_state = sampler.update(s_state, draw, fb)
         metrics = {
@@ -370,8 +379,31 @@ def build_fed_scan_segment(
             key=key,
         )
 
+    placement = None
+    if getattr(sampler, "shard", None) is not None:
+        # Shape-only template: the metrics dict's structure (and its lack of
+        # any (N,)-axis buffer) is the same for every horizon length, so a
+        # 1-round buffer set is enough to derive the placement pytree.
+        key_s = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+        params_s = jax.eval_shape(lambda k: transformer.init_params(cfg, k), key_s)
+        template = TrainState(
+            params=params_s,
+            opt_state=(),
+            sampler=sampler.abstract_state(),
+            metrics=init_metric_buffers(
+                body,
+                (params_s, sampler.abstract_state()),
+                jax.eval_shape(lambda k: jnp.stack([k, k]), key_s),
+                1,
+            ),
+            round=jax.ShapeDtypeStruct((), jnp.int32),
+            key=key_s,
+        )
+        placement = build_placement(template, sampler)
+
     segment = make_segment_fn(
         body, derive_step,
         with_opt_state=False, with_round_index=False, donate=donate,
+        placement=placement,
     )
     return segment, make_state

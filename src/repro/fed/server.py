@@ -76,6 +76,7 @@ from repro.fed import client as fed_client
 from repro.fed import cohort as fed_cohort
 from repro.fed.state import (
     TrainState,
+    build_placement,
     init_metric_buffers,
     make_segment_fn,
     run_segmented,
@@ -119,6 +120,16 @@ class FedConfig:
     # diagnostics.  Pure diagnostic weight at large T*N; turn off to drop it
     # from the on-device metrics (regret costs are still tracked).
     track_scores: bool = True
+    # Explicit size guard for that (T, N) buffer: build_segment_runner raises
+    # (instead of silently OOMing the device at large N) when the buffer
+    # would exceed this many bytes and host offload is off.
+    score_history_bytes_limit: int = 1 << 30
+    # Chunked host offload for the score history: the device buffer shrinks
+    # to (ckpt_every, N) — a ring the segment stitch wraps into — and every
+    # segment boundary drains it to host memory, where the full (T, N)
+    # history is assembled for the regret diagnostics.  Requires the
+    # compiled path with ckpt_every > 0.
+    score_history_host_offload: bool = False
     # Compiled-path segment length: the scan runs in jitted segments of this
     # many rounds so a CheckpointManager can publish the full TrainState at
     # every boundary.  0 = whole horizon as one segment (the monolithic
@@ -251,6 +262,7 @@ def _build_round_body(task: Task, dataset, sampler: samplers.Sampler, cfg: FedCo
 
         if cfg.oracle_metrics:
             deltas, losses, feedback_full = all_clients(params, k_data)
+            feedback_full = sampler.shard_constrain(feedback_full)
             feedback = feedback_full * draw.mask
             train_loss = jnp.sum(lam * losses)
             cohort_size = draw.size
@@ -266,8 +278,10 @@ def _build_round_body(task: Task, dataset, sampler: samplers.Sampler, cfg: FedCo
             # Sampler feedback is an (N,)-vector scatter of a (C,) vector —
             # the sampler state is legitimately N-sized; only the (N, D)
             # delta pytree scatter is the scale problem.
-            feedback = fed_cohort.scatter_cohort(
-                jnp.where(sel.valid, lam[sel.ids] * norms_c, 0.0), sel, n
+            feedback = sampler.shard_constrain(
+                fed_cohort.scatter_cohort(
+                    jnp.where(sel.valid, lam[sel.ids] * norms_c, 0.0), sel, n
+                )
             )
             # Unbiased cohort estimate of the full weighted loss sum_i lam_i l_i.
             train_loss = jnp.sum(jnp.where(sel.valid, sel.weights * losses_c, 0.0))
@@ -375,6 +389,39 @@ def _materialize_history(metrics: dict, cfg: FedConfig, has_eval: bool) -> Histo
     return hist
 
 
+def _score_history_plan(cfg: FedConfig, n_clients: int):
+    """Size-guard the oracle (T, N) score-history buffer and pick its device
+    shape.
+
+    Returns the number of buffer rows to allocate on device: ``cfg.rounds``
+    normally, ``cfg.ckpt_every`` when host offload is on (the segment stitch
+    wraps the shorter buffer as a ring and ``run_federated`` drains it to host
+    every segment boundary).  Raises instead of silently OOMing the device
+    when the full-horizon buffer would exceed
+    ``cfg.score_history_bytes_limit``."""
+    if not (cfg.oracle_metrics and cfg.track_scores):
+        return None
+    full_bytes = int(cfg.rounds) * int(n_clients) * 4  # f32 rows
+    if cfg.score_history_host_offload:
+        if cfg.ckpt_every <= 0:
+            raise ValueError(
+                "score_history_host_offload=True needs ckpt_every > 0 (the "
+                "device ring holds one segment of score rows); got "
+                f"ckpt_every={cfg.ckpt_every}"
+            )
+        return min(int(cfg.ckpt_every), int(cfg.rounds))
+    if full_bytes > cfg.score_history_bytes_limit:
+        raise ValueError(
+            f"track_scores=True would allocate a ({cfg.rounds}, {n_clients}) "
+            f"f32 score-history buffer ({full_bytes / 2**20:.0f} MiB) on "
+            f"device, over score_history_bytes_limit="
+            f"{cfg.score_history_bytes_limit / 2**20:.0f} MiB.  Set "
+            "score_history_host_offload=True (chunked host drain), raise the "
+            "limit, or set track_scores=False."
+        )
+    return int(cfg.rounds)
+
+
 def _derive_keys_step(k, _):
     """One link of the reference loop's chained per-round key derivation:
     ``key, k_data, k_sample = split(key, 3)``.  Both execution paths (and the
@@ -420,22 +467,37 @@ def build_segment_runner(
     opt_state = cfg.server_opt.init(params)
     s_state = sampler.init()
 
+    metrics = init_metric_buffers(
+        body,
+        (params, opt_state, s_state),
+        (jnp.zeros((), jnp.int32), key, key),
+        cfg.rounds,
+    )
+    score_rows = _score_history_plan(cfg, dataset.n_clients)
+    if score_rows is not None and score_rows != cfg.rounds:
+        # Host-offload ring: one segment of score rows on device; the rem
+        # stitch in make_segment_fn wraps writes into it and run_federated
+        # drains it to host at every segment boundary.
+        metrics["scores"] = jnp.zeros(
+            (score_rows,) + metrics["scores"].shape[1:],
+            metrics["scores"].dtype,
+        )
+
     init_state = TrainState(
         params=params,
         opt_state=opt_state,
         sampler=s_state,
-        metrics=init_metric_buffers(
-            body,
-            (params, opt_state, s_state),
-            (jnp.zeros((), jnp.int32), key, key),
-            cfg.rounds,
-        ),
+        metrics=metrics,
         round=jnp.zeros((), jnp.int32),
         key=key,
+    )
+    placement = (
+        build_placement(init_state, sampler) if sampler.shard is not None else None
     )
     segment = make_segment_fn(
         body, _derive_keys_step,
         with_opt_state=True, with_round_index=True, donate=donate,
+        placement=placement,
     )
     return segment, init_state
 
@@ -469,16 +531,42 @@ def run_federated(
         segment, state = build_segment_runner(task, dataset, sampler, cfg, eval_data)
         if ckpt_manager is not None:
             state, _ = ckpt_manager.restore_or_init(state)
+
+        on_segment = None
+        offload = (
+            cfg.oracle_metrics and cfg.track_scores and cfg.score_history_host_offload
+        )
+        if offload:
+            # Chunked host drain of the (ckpt_every, N) device ring: segments
+            # start at multiples of ckpt_every, so each segment's rows sit at
+            # the front of the ring.  Rounds executed before a restore (by an
+            # earlier process) stay zero — the offloaded history covers this
+            # process's rounds.
+            scores_host = np.zeros(
+                (cfg.rounds, dataset.n_clients),
+                np.dtype(state.metrics["scores"].dtype),
+            )
+            drained_to = int(state.round)
+
+            def on_segment(st, done):
+                nonlocal drained_to
+                rows = np.asarray(st.metrics["scores"])[: done - drained_to]
+                scores_host[drained_to:done] = rows
+                drained_to = done
+
         state = run_segmented(
             state,
             cfg.rounds,
             segment,
             ckpt_every=cfg.ckpt_every,
             manager=ckpt_manager,
+            on_segment=on_segment,
         )
         jax.block_until_ready(state)
         params = state.params
         metrics = jax.tree_util.tree_map(np.asarray, state.metrics)
+        if offload:
+            metrics["scores"] = scores_host
     else:
         key = jax.random.PRNGKey(cfg.seed)
         key, init_key = jax.random.split(key)

@@ -12,6 +12,7 @@ from repro.kernels.fused_weighted_agg import (
     fused_weighted_agg,
 )
 from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.sharded_waterfill import waterfill_level_stats
 from repro.kernels.ssd_scan import ssd_scan
 
 __all__ = [
@@ -23,4 +24,5 @@ __all__ = [
     "fused_weighted_agg",
     "rmsnorm",
     "ssd_scan",
+    "waterfill_level_stats",
 ]

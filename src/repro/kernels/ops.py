@@ -14,6 +14,7 @@ from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.fused_weighted_agg import fused_weighted_agg as _agg
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 from repro.kernels.ssd_scan import ssd_scan as _ssd
+from repro.kernels.sharded_waterfill import waterfill_level_stats as _waterfill
 
 __all__ = [
     "flash_attention",
@@ -21,6 +22,7 @@ __all__ = [
     "fused_weighted_agg",
     "rmsnorm",
     "aggregate_cohort_updates",
+    "waterfill_level_stats",
 ]
 
 
@@ -42,6 +44,10 @@ def fused_weighted_agg(g, w, **kw):
 
 def rmsnorm(x, scale, **kw):
     return _rmsnorm(x, scale, interpret=_interpret(), **kw)
+
+
+def waterfill_level_stats(scores, levels, floors, **kw):
+    return _waterfill(scores, levels, floors, interpret=_interpret(), **kw)
 
 
 def aggregate_cohort_updates(stacked_deltas, weights, *, block_d: int = 2048):

@@ -14,6 +14,7 @@ __all__ = [
     "ssd_reference",
     "weighted_agg_reference",
     "rmsnorm_reference",
+    "waterfill_stats_reference",
 ]
 
 
@@ -83,6 +84,30 @@ def weighted_agg_reference(g: jax.Array, w: jax.Array):
     d = jnp.einsum("c,cd->d", w.astype(jnp.float32), gf)
     sq = jnp.sum(gf * gf, axis=1)
     return d, sq
+
+
+def waterfill_stats_reference(scores: jax.Array, levels: jax.Array, floors: jax.Array):
+    """scores (M,) (+inf entries inert); levels/floors (L,).
+
+    Returns (n_below, n_floor, mid_sum), each (L,) f32 — per-level threshold
+    statistics of the water-filling counting function (order-independent
+    masked reductions, the definitionally-correct form):
+
+      n_below[k] = #{ a_i <  levels[k] }
+      n_floor[k] = #{ a_i <= floors[k] }
+      mid_sum[k] = sum of a_i with floors[k] < a_i < levels[k]
+    """
+    a = scores.astype(jnp.float32)[:, None]
+    lv = levels.astype(jnp.float32)[None, :]
+    fl = floors.astype(jnp.float32)[None, :]
+    below = a < lv
+    at_floor = a <= fl
+    in_mid = jnp.logical_and(~at_floor, below)
+    return (
+        jnp.sum(below.astype(jnp.float32), axis=0),
+        jnp.sum(at_floor.astype(jnp.float32), axis=0),
+        jnp.sum(jnp.where(in_mid, a, 0.0), axis=0),
+    )
 
 
 def rmsnorm_reference(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:

@@ -1,0 +1,111 @@
+"""Per-shard water-filling threshold statistics as a Pallas segmented scan.
+
+The sharded ISP solve (``repro.core.solver``) finds the scalar water level
+``s`` with ``sum_i clip(a_i/s, p_min, 1) = K`` by a fixed-depth threshold
+search: every refinement round evaluates the monotone counting function at a
+whole ladder of L candidate levels, the per-shard partial statistics are
+``psum``-merged across the mesh, and the bracket tightens to the pair of
+adjacent levels enclosing the solution.  This kernel is the per-shard
+workhorse of that search — one sequential pass over the shard's score chunks
+accumulating, for all L levels at once:
+
+  n_below[k] = #{ a_i <  levels[k] }          (searchsorted side='left')
+  n_floor[k] = #{ a_i <= floors[k] }          (searchsorted side='right',
+                                               floors[k] = levels[k] * p_min)
+  mid_sum[k] = sum of a_i with floors[k] < a_i < levels[k]
+
+Same block structure as ``ssd_scan.py``: a sequential chunk grid dimension
+with the running (3, L) accumulator carried in VMEM scratch, initialized via
+``pl.when`` on the first chunk.  No chunk's scores ever round-trip to HBM
+between grid steps.
+
+  grid = (n_chunks,)                 chunks sequential (accumulator carry)
+  scores block  (1, Q)    VMEM       one chunk of shard-local scores
+  levels block  (2, L)    VMEM       [levels; floors], resident every step
+  acc           (3, L) f32 scratch   carried across chunks
+
+Padding contract: score entries equal to +inf are inert (they sit above any
+finite level, so no count or sum includes them) — callers pad both the
+shard-split remainder and the chunk remainder with +inf.  Counts are carried
+as f32, exact for shards up to 2^24 scores.
+
+Oracle: ref.waterfill_stats_reference (order-independent masked reductions).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["waterfill_level_stats"]
+
+_LANE = 128
+
+
+def _kernel(s_ref, lv_ref, out_ref, acc_ref):
+    ic = pl.program_id(0)
+
+    @pl.when(ic == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = s_ref[0].astype(jnp.float32)  # (Q,)
+    levels = lv_ref[0].astype(jnp.float32)  # (L,)
+    floors = lv_ref[1].astype(jnp.float32)  # (L,)
+
+    below = a[:, None] < levels[None, :]  # (Q, L)
+    at_floor = a[:, None] <= floors[None, :]
+    in_mid = jnp.logical_and(~at_floor, below)
+
+    acc_ref[0, :] = acc_ref[0, :] + jnp.sum(below.astype(jnp.float32), axis=0)
+    acc_ref[1, :] = acc_ref[1, :] + jnp.sum(at_floor.astype(jnp.float32), axis=0)
+    acc_ref[2, :] = acc_ref[2, :] + jnp.sum(
+        jnp.where(in_mid, a[:, None], 0.0), axis=0
+    )
+    out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def waterfill_level_stats(
+    scores: jax.Array,
+    levels: jax.Array,
+    floors: jax.Array,
+    *,
+    chunk: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """scores (M,) shard-local (+inf entries inert); levels/floors (L,).
+
+    Returns ``(n_below, n_floor, mid_sum)``, each (L,) f32 — the shard-local
+    threshold statistics defined in the module docstring, ready for a psum
+    merge across the client-shard mesh axis."""
+    (m,) = scores.shape
+    (l,) = levels.shape
+    q = max(_LANE, min(chunk, -(-m // _LANE) * _LANE))
+    m_pad = -(-max(m, 1) // q) * q
+    l_pad = -(-l // _LANE) * _LANE
+    s2 = jnp.full((m_pad,), jnp.inf, jnp.float32).at[:m].set(
+        scores.astype(jnp.float32)
+    ).reshape(m_pad // q, q)
+    lv2 = jnp.stack(
+        [
+            jnp.ones((l_pad,), jnp.float32).at[:l].set(levels.astype(jnp.float32)),
+            jnp.zeros((l_pad,), jnp.float32).at[:l].set(floors.astype(jnp.float32)),
+        ]
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid=(m_pad // q,),
+        in_specs=[
+            pl.BlockSpec((1, q), lambda ic: (ic, 0)),
+            pl.BlockSpec((2, l_pad), lambda ic: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((3, l_pad), lambda ic: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((3, l_pad), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((3, l_pad), jnp.float32)],
+        interpret=interpret,
+    )(s2, lv2)
+    return out[0, :l], out[1, :l], out[2, :l]

@@ -1,13 +1,87 @@
-"""Production meshes (TPU v5e pods).
+"""Production meshes (TPU v5e pods) + the sampler shard layout (``ShardSpec``).
 
 Defined as FUNCTIONS so importing this module never touches jax device
 state; the dry-run entrypoint sets XLA_FLAGS *before* any jax import.
+``ShardSpec`` is the one exception to the functions-only rule: it is a
+frozen, hashable *description* of a layout (mesh shape + axis names + which
+axis carries the client dimension) — building it touches no device state
+either; the mesh is materialized lazily by ``ShardSpec.mesh()``.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh", "fsdp_axes", "batch_axes"]
+__all__ = [
+    "ShardSpec",
+    "make_production_mesh",
+    "make_host_mesh",
+    "fsdp_axes",
+    "batch_axes",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Declarative layout of a sampler's (N,) client axis over a mesh.
+
+    The sampler stack is configured with a ``ShardSpec`` (not a live
+    ``Mesh``) so the frozen ``Sampler`` dataclasses stay hashable and
+    JSON-describable: ``axes`` is the full mesh shape as
+    ``((name, size), ...)`` pairs and ``axis`` names the mesh axis the
+    (N,) client dimension is split over (every other axis replicates it).
+    Two processes agreeing on a ``ShardSpec`` agree on the layout — which
+    is why checkpoint manifests record ``to_manifest()`` and why restoring
+    onto a *different* mesh shape is legal: the arrays round-trip through
+    host numpy and are re-laid-out by the restoring process's own spec.
+    """
+
+    axes: tuple = (("data", 1),)  # ((axis_name, size), ...) — the mesh shape
+    axis: str = "data"  # which axis carries the (N,) client dimension
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "axes", tuple((str(n), int(s)) for n, s in self.axes)
+        )
+        names = [n for n, _ in self.axes]
+        if self.axis not in names:
+            raise ValueError(
+                f"ShardSpec.axis {self.axis!r} is not a mesh axis; have {names}"
+            )
+
+    @classmethod
+    def from_mesh(cls, mesh, axis: str = "data") -> "ShardSpec":
+        return cls(
+            axes=tuple(zip(mesh.axis_names, mesh.devices.shape)), axis=axis
+        )
+
+    @property
+    def num_shards(self) -> int:
+        return dict(self.axes)[self.axis]
+
+    def mesh(self):
+        """Materialize the described mesh over this process's devices."""
+        return jax.make_mesh(
+            tuple(s for _, s in self.axes), tuple(n for n, _ in self.axes)
+        )
+
+    def named_sharding(self, mesh=None):
+        """NamedSharding splitting a leading (N,) axis over ``self.axis``."""
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        return NamedSharding(mesh or self.mesh(), PartitionSpec(self.axis))
+
+    def to_manifest(self) -> dict:
+        """JSON-ready record for checkpoint manifests (provenance, not a
+        restore constraint — see class docstring)."""
+        return {"axes": [[n, s] for n, s in self.axes], "axis": self.axis}
+
+    @classmethod
+    def from_manifest(cls, data: dict) -> "ShardSpec":
+        return cls(
+            axes=tuple((n, s) for n, s in data["axes"]), axis=data["axis"]
+        )
 
 
 def _override_mesh():

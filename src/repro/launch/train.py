@@ -109,6 +109,12 @@ def make_parser() -> argparse.ArgumentParser:
         "resumable",
     )
     ap.add_argument(
+        "--shard-sampler", default="", metavar="AXIS",
+        help="shard every sampler (N,)-axis tensor over this mesh axis "
+        "(e.g. 'data') — the million-client switch: the budget solve, draw, "
+        "and feedback update run shard-local (ExecutionSpec.sampler_axis)",
+    )
+    ap.add_argument(
         "--spec", default="",
         help="load the experiment from an ExperimentSpec JSON file (as "
         "emitted by --dump-spec); the experiment flags above are ignored",
@@ -160,6 +166,7 @@ def build_spec_from_args(args) -> ExperimentSpec:
             seed=args.seed,
             compiled=args.compiled,
             ckpt_every=args.ckpt_every,
+            sampler_axis=args.shard_sampler or None,
         ),
     )
 
