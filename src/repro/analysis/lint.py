@@ -998,22 +998,53 @@ def sweep_registry(
     detection cannot collide with a model dimension.  ``fast=True`` skips
     the compile-once and HLO passes (pure tracing; seconds instead of
     minutes)."""
-    from repro.api import ExecutionSpec, ExperimentSpec, FederationSpec, SamplerSpec, TaskSpec
+    from repro.api import (
+        ExecutionSpec,
+        ExperimentSpec,
+        FaultSpec,
+        FederationSpec,
+        SamplerSpec,
+        TaskSpec,
+    )
     from repro.core.samplers import sampler_names
+
+    # The faulted cell's FaultSpec exercises all three fault axes at once —
+    # Markov availability (carried chain), deadline stragglers, and the
+    # buffered-async ring (B=3, deliberately != n_clients so the width
+    # auditor cannot mistake the (B, D) buffer for a client axis).
+    faulted_spec = FaultSpec(
+        availability="markov",
+        availability_kwargs={"p_on": 0.7, "p_off": 0.2},
+        deadline=1.0,
+        latency="exponential",
+        latency_kwargs={"scale": 0.5},
+        async_buffer=3,
+        staleness_discount=0.5,
+    )
 
     report = LintReport()
     names = list(samplers) if samplers is not None else sampler_names()
     for name in names:
         kwargs = {"horizon": rounds} if name in ("kvib", "vrb") else {}
         for oracle in (True, False):
-            # The third execution mode is the sharded-sampler compiled path:
-            # (compiled, sampler_axis).  Reference x sharded adds nothing the
-            # compiled cell doesn't trace (same body), so it is not swept.
-            for compiled, axis in ((True, None), (False, None), (True, "data")):
+            # Beyond (compiled, sampler_axis), the fourth execution cell is
+            # the fault-injected compiled path: the availability-composed
+            # round body with the deadline and async-ring machinery in the
+            # carry must satisfy the same width/dtype/scan-safety/compile-
+            # once contracts as the clean body.  Reference x sharded and
+            # reference x faulted add nothing the compiled cells don't trace
+            # (same bodies), so they are not swept.
+            for compiled, axis, faulted in (
+                (True, None, False),
+                (False, None, False),
+                (True, "data", False),
+                (True, None, True),
+            ):
                 cell = (
                     f"{name} x {'oracle' if oracle else 'deployable'} x "
                     f"{'compiled' if compiled else 'reference'}"
                     + (" x sharded" if axis else "")
+                    + (" x faulted" if faulted else "")
                 )
                 if progress is not None:
                     progress(cell)
@@ -1034,6 +1065,7 @@ def sweep_registry(
                     execution=ExecutionSpec(
                         compiled=compiled, oracle_metrics=oracle, sampler_axis=axis
                     ),
+                    fault=faulted_spec if faulted else FaultSpec(),
                 )
                 sub = run_suite(
                     spec,

@@ -34,6 +34,7 @@ def lint(spec, **kwargs):
 from repro.api.spec import (
     ExecutionSpec,
     ExperimentSpec,
+    FaultSpec,
     FederationSpec,
     SamplerSpec,
     TaskSpec,
@@ -50,6 +51,7 @@ __all__ = [
     "SamplerSpec",
     "FederationSpec",
     "ExecutionSpec",
+    "FaultSpec",
     "BuiltExperiment",
     "build",
     "run",

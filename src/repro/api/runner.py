@@ -197,7 +197,13 @@ def _specs_compatible(a: ExperimentSpec, b: ExperimentSpec) -> bool:
     if fa.cohort is None or fb.cohort is None:
         fa = dataclasses.replace(fa, cohort=None)
         fb = dataclasses.replace(fb, cohort=None)
-    return (a.task, a.sampler, fa, a.execution) == (b.task, b.sampler, fb, b.execution)
+    return (a.task, a.sampler, fa, a.execution, a.fault) == (
+        b.task,
+        b.sampler,
+        fb,
+        b.execution,
+        b.fault,
+    )
 
 
 def _make_mesh(spec: ExperimentSpec):
@@ -253,12 +259,31 @@ def _run_zoo(built: BuiltExperiment, ckpt_manager) -> History:
     )
     jax.block_until_ready(state)
 
+    params = state.params
+    fault = spec.fault
+    if fault.enabled and int(fault.async_buffer) > 0:
+        # End-of-horizon flush of still-pending stale deltas (mid-run segment
+        # boundaries keep the buffer in the carry — core.stragglers).
+        from repro.core import stragglers
+
+        buf = state.faults["buf"]
+        if np.asarray(buf["valid"]).any():
+            pending = stragglers.flush_pending(
+                buf, spec.federation.rounds, float(fault.staleness_discount)
+            )
+            d_pend = stragglers.vec_to_tree(pending, params)
+            params = jax.tree_util.tree_map(lambda p, g: p - g, params, d_pend)
+
     hist = History()
     hist.rounds = list(range(spec.federation.rounds))
     hist.train_loss = [float(x) for x in np.asarray(state.metrics["loss"])]
     hist.cohort_size = [int(x) for x in np.asarray(state.metrics["cohort_size"])]
     hist.cohort_dropped = [int(x) for x in np.asarray(state.metrics["dropped"])]
-    hist.final_params = jax.tree_util.tree_map(np.asarray, state.params)
+    if "deadline_dropped" in state.metrics:
+        hist.deadline_dropped = [
+            int(x) for x in np.asarray(state.metrics["deadline_dropped"])
+        ]
+    hist.final_params = jax.tree_util.tree_map(np.asarray, params)
     hist.wall_time_s = time.time() - t0
     return hist
 

@@ -48,6 +48,7 @@ __all__ = [
     "SamplerSpec",
     "FederationSpec",
     "ExecutionSpec",
+    "FaultSpec",
     "ExperimentSpec",
     "register_task",
     "register_dataset",
@@ -314,6 +315,120 @@ class ExecutionSpec:
             )
 
 
+_AVAILABILITY_MODES = (None, "bernoulli", "markov", "diurnal")
+_LATENCY_DISTS = ("exponential", "uniform", "lognormal")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Deployment-realism axes: availability, deadline stragglers, async.
+
+    The default-constructed spec is fully OFF (``enabled`` is False) and
+    both stacks then run the exact PR-7 round body — the fault layer is a
+    build-time branch, not a runtime mask, so disabling it reproduces
+    pre-fault results bitwise.  All three axes are independent and compose:
+
+    availability / availability_kwargs:
+        Time-varying client availability process intersected with every
+        sampler's draw (``core.stragglers.availability_step``):
+        ``"bernoulli"`` (``q``: scalar or per-client tuple in [0, 1]),
+        ``"markov"`` (per-client on/off chain; ``p_on`` = P(off->on),
+        ``p_off`` = P(on->off); the chain state lives in the ``TrainState``
+        carry), ``"diurnal"`` (deterministic schedule; ``period``, ``duty``).
+        The estimator stays unbiased via the composed ``q * p`` correction
+        (``core.stragglers.available_draw``).
+    deadline / latency / latency_kwargs:
+        ``deadline`` (a positive float, ``None`` = off) drops clients whose
+        in-trace latency draw exceeds it AFTER local training is scheduled;
+        survivor weights are rescaled by ``1 / P(latency <= deadline)``.
+        ``latency`` picks the distribution: ``"exponential"`` (``scale``),
+        ``"uniform"`` (``lo``, ``hi``), ``"lognormal"`` (``mu``, ``sigma``).
+    async_buffer / staleness_discount / round_time:
+        ``async_buffer = B > 0`` switches the server to buffered-async
+        aggregation: each round's aggregate enters a carried (B, D) ring
+        buffer with an in-trace latency-derived arrival round (latency
+        quantized by ``round_time``, which defaults to ``deadline`` then
+        1.0) and is applied ``staleness_discount ** staleness``-weighted
+        when it arrives; still-pending deltas flush once after the horizon.
+    """
+
+    availability: str | None = None
+    availability_kwargs: dict = dataclasses.field(default_factory=dict)
+    deadline: float | None = None
+    latency: str = "exponential"
+    latency_kwargs: dict = dataclasses.field(default_factory=dict)
+    async_buffer: int = 0
+    staleness_discount: float = 0.5
+    round_time: float | None = None
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "availability_kwargs", _normalize(self.availability_kwargs)
+        )
+        object.__setattr__(self, "latency_kwargs", _normalize(self.latency_kwargs))
+        if self.availability not in _AVAILABILITY_MODES:
+            raise ValueError(
+                f"unknown availability process {self.availability!r}; "
+                f"options: {[m for m in _AVAILABILITY_MODES if m]} or null"
+            )
+        kw = dict(self.availability_kwargs)
+        if self.availability is None and kw:
+            raise ValueError(
+                "FaultSpec.availability_kwargs given but availability is null"
+            )
+        if self.availability == "bernoulli":
+            q = kw.get("q", 0.9)
+            qs = [float(v) for v in (q if isinstance(q, tuple) else (q,))]
+            if any(not (0.0 <= v <= 1.0) for v in qs):
+                raise ValueError(f"bernoulli availability q must lie in [0, 1], got {q!r}")
+            if all(v == 0.0 for v in qs):
+                raise ValueError("bernoulli availability q is all-zero: no client is ever available")
+        elif self.availability == "markov":
+            p_on = float(kw.get("p_on", 0.5))
+            p_off = float(kw.get("p_off", 0.5))
+            if not (0.0 < p_on <= 1.0):
+                raise ValueError(f"markov p_on must lie in (0, 1], got {p_on}")
+            if not (0.0 <= p_off < 1.0):
+                raise ValueError(f"markov p_off must lie in [0, 1), got {p_off}")
+        elif self.availability == "diurnal":
+            period = float(kw.get("period", 24.0))
+            duty = float(kw.get("duty", 0.5))
+            if period <= 0.0:
+                raise ValueError(f"diurnal period must be positive, got {period}")
+            if not (0.0 < duty <= 1.0):
+                raise ValueError(f"diurnal duty must lie in (0, 1], got {duty}")
+        if self.latency not in _LATENCY_DISTS:
+            raise ValueError(
+                f"unknown latency distribution {self.latency!r}; "
+                f"options: {list(_LATENCY_DISTS)}"
+            )
+        if self.deadline is not None:
+            if float(self.deadline) <= 0.0:
+                raise ValueError(f"deadline must be positive, got {self.deadline}")
+            # Raises when P(latency <= deadline) ~ 0 (no unbiased reweighting
+            # exists); also validates the latency kwargs for the chosen dist.
+            from repro.core.stragglers import deadline_survival
+
+            deadline_survival(self)
+        if int(self.async_buffer) < 0:
+            raise ValueError(f"async_buffer must be >= 0, got {self.async_buffer}")
+        if not (0.0 < float(self.staleness_discount) <= 1.0):
+            raise ValueError(
+                f"staleness_discount must lie in (0, 1], got {self.staleness_discount}"
+            )
+        if self.round_time is not None and float(self.round_time) <= 0.0:
+            raise ValueError(f"round_time must be positive, got {self.round_time}")
+
+    @property
+    def enabled(self) -> bool:
+        """True when ANY fault axis is on (the build-time branch switch)."""
+        return (
+            self.availability is not None
+            or self.deadline is not None
+            or int(self.async_buffer) > 0
+        )
+
+
 @dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
     """The canonical, serializable description of one experiment.
@@ -325,6 +440,7 @@ class ExperimentSpec:
     sampler: SamplerSpec = dataclasses.field(default_factory=SamplerSpec)
     federation: FederationSpec = dataclasses.field(default_factory=FederationSpec)
     execution: ExecutionSpec = dataclasses.field(default_factory=ExecutionSpec)
+    fault: FaultSpec = dataclasses.field(default_factory=FaultSpec)
 
     # -- serialization -------------------------------------------------------
     def to_dict(self) -> dict:
@@ -335,6 +451,7 @@ class ExperimentSpec:
                 "sampler": dataclasses.asdict(self.sampler),
                 "federation": dataclasses.asdict(self.federation),
                 "execution": dataclasses.asdict(self.execution),
+                "fault": dataclasses.asdict(self.fault),
             }
         )
 
@@ -350,6 +467,7 @@ class ExperimentSpec:
             "sampler": SamplerSpec,
             "federation": FederationSpec,
             "execution": ExecutionSpec,
+            "fault": FaultSpec,
         }
         unknown = sorted(set(data) - set(sections))
         if unknown:
@@ -404,6 +522,7 @@ class ExperimentSpec:
             track_scores=ex.track_scores,
             ckpt_every=ex.ckpt_every,
             score_history_host_offload=ex.score_history_host_offload,
+            faults=self.fault if self.fault.enabled else None,
         )
 
     def round_spec(self):
@@ -432,4 +551,5 @@ class ExperimentSpec:
             local_lr=fed.local_lr,
             server_lr=server_lr,
             local_batch=fed.batch_size,
+            faults=self.fault if self.fault.enabled else None,
         )

@@ -42,6 +42,16 @@ def client_weights(
     The estimator is always ``d = sum_i w_i g_i`` with w from this function —
     the distributed round pre-scales each client's delta by ``w_i`` locally and
     reduces, so estimation costs one collective regardless of procedure.
+
+    Composed-draw contract: the probabilities used here are ``draw.marginals``
+    / ``draw.draw_probs`` verbatim, so a draw whose probabilities were
+    composed upstream — e.g. ``core.stragglers.available_draw(draw, avail,
+    q)``, which multiplies them by the availability probability ``q`` — makes
+    this the corrected estimator (``lam / (q p)``) with no extra bookkeeping.
+    The 1e-30 floors below are dead-code guards for the masked-out lanes
+    only: a drawn client with a genuinely zero probability is a modeling
+    error the composers reject (``stragglers.ZeroAvailabilityError`` on the
+    host path, mask-to-zero in-trace) before the weight is formed.
     """
     lam = jnp.asarray(lam)
     if procedure == "isp":

@@ -1,40 +1,412 @@
-"""Client availability / stragglers (paper Appendix E.1).
+"""Deployment realism: availability, deadline stragglers, buffered-async.
 
 In cross-device FL a subset A^t ~ q of clients is available each round
 (devices busy, offline, or slow).  The estimator stays unbiased by sampling
-only from A^t and importance-correcting with the availability probability:
+only from A^t and importance-correcting with the availability probability
+(paper Appendix E.1; worked out in general in "A General Theory for Client
+Sampling in Federated Learning", arXiv 2107.12211):
 
     d^t = sum_{i in S^t subseteq A^t} lambda_i g_i / (q_i p_i)
 
-``available_draw`` composes any base sampler's draw with an availability
-mask; ``availability_weights`` produces the corrected estimator weights.
+This module is the scan-safe fault layer BOTH compiled stacks run inside
+their traced round bodies, switched by the ``repro.api.FaultSpec`` section
+of an ``ExperimentSpec``.  Compiled entry points that consume it:
+
+* ``repro.fed.server._build_round_body`` — the simulation stack's round body
+  (both the segmented ``lax.scan`` path and the per-round reference loop);
+* ``repro.fed.round._build_scan_body`` — the pod-scale compiled round body
+  (``build_fed_scan_segment`` / ``repro.launch.train --compiled``);
+* ``repro.analysis.lint.sweep_registry`` — the faulted lint cell traces the
+  availability-composed bodies through the same auditors as the clean ones.
+
+Three components, all pure functions of (fault config, carried state, round
+index, PRNG key) so they ride ``lax.scan`` and checkpoint/resume bit-for-bit:
+
+1. **Availability processes** (``availability_step``): static Bernoulli(q),
+   a per-client Markov on/off chain (the carried (N,) ``chain`` state), and
+   a deterministic diurnal schedule.  The returned per-round availability
+   probability ``q^t`` is the *conditional* inclusion probability given the
+   carried chain state, so the ``1/q`` correction is conditionally — hence
+   unconditionally — unbiased.  ``available_draw`` composes the mask AND the
+   probabilities into the draw, making downstream ``client_weights`` the
+   availability-corrected estimator with no further bookkeeping.
+2. **Deadline stragglers** (``latency_draw`` + ``deadline_survival``):
+   per-client latency drawn in-trace from a spec-configured distribution;
+   clients past the round deadline are masked out AFTER local training is
+   scheduled, and survivor weights are rescaled by the inverse survival
+   probability ``1 / P(latency <= deadline)`` (a static build-time float) so
+   the estimate stays unbiased.
+3. **Buffered-async aggregation** (``async_step`` / ``flush_pending``): the
+   server carries a (B, D) stale-delta ring buffer; each round's aggregate is
+   "dispatched" with an in-trace latency-derived arrival round, applied with
+   a ``staleness_discount ** staleness`` factor when it arrives, and any
+   still-pending deltas are flushed once after the horizon completes.  The
+   buffer lives in the canonical ``TrainState`` carry, so mid-run segment
+   boundaries stay bitwise-neutral and SIGKILL/resume is exact.
+
 The sampler's own feedback update keeps using p~ (its sampling randomness);
 availability is exogenous.
 """
 from __future__ import annotations
 
+import math
+from typing import Any, Mapping
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.samplers import SampleResult
 
-__all__ = ["available_draw", "availability_weights"]
+__all__ = [
+    "ZeroAvailabilityError",
+    "available_draw",
+    "availability_weights",
+    "availability_init",
+    "availability_step",
+    "latency_draw",
+    "deadline_survival",
+    "fault_state_init",
+    "abstract_fault_state",
+    "async_step",
+    "flush_pending",
+    "flat_dim",
+    "tree_to_vec",
+    "vec_to_tree",
+]
 
 
-def available_draw(draw: SampleResult, avail_mask: jax.Array) -> SampleResult:
-    """Restrict a draw to the available set A^t (exogenous Bernoulli(q))."""
+class ZeroAvailabilityError(ValueError):
+    """A drawn client has availability probability q == 0: its contribution
+    can never be observed and no finite importance weight corrects for it.
+    (The pre-fix code silently clamped q at 1e-30, yielding a ~1e30 weight.)
+    """
+
+
+def available_draw(
+    draw: SampleResult, avail_mask: jax.Array, q: jax.Array | None = None
+) -> SampleResult:
+    """Restrict a draw to the available set A^t and (with ``q``) compose the
+    availability probability into the draw's own probabilities.
+
+    Contract: with ``q`` given, the returned draw's ``marginals`` and
+    ``draw_probs`` are the *effective* inclusion probabilities ``q * p`` —
+    the probability a client is both sampled AND available — so a plain
+    ``estimator.client_weights`` call on the composed draw yields the
+    availability-corrected weights ``lam / (q p)`` (ISP) or
+    ``counts lam / (K q q_draw)`` (RSP) with no further bookkeeping.
+    Clients with ``q == 0`` are excluded by the composed mask, so their
+    weight is zero (the in-trace mask-to-zero guarantee) rather than the
+    ~1e30 blowup a downstream ``1/max(p, 1e-30)`` clamp would produce.
+
+    Without ``q`` (legacy two-step form) the probabilities are returned
+    UNCORRECTED — the caller must apply ``availability_weights`` for the
+    ``1/q`` factor; feeding the uncomposed draw to plain ``client_weights``
+    yields a biased estimate.
+    """
     mask = jnp.logical_and(draw.mask, avail_mask)
     counts = jnp.where(avail_mask, draw.counts, 0)
+    if q is None:
+        return SampleResult(
+            mask=mask,
+            counts=counts,
+            marginals=draw.marginals,
+            draw_probs=draw.draw_probs,
+        )
+    qf = jnp.asarray(q, jnp.float32)
+    # Exclude q == 0 clients from the mask even if the exogenous mask said
+    # available (a deterministic schedule's q is exactly its 0/1 mask, but a
+    # caller-supplied q may disagree with its sampled mask realization).
+    mask = jnp.logical_and(mask, qf > 0.0)
     return SampleResult(
-        mask=mask, counts=counts, marginals=draw.marginals, draw_probs=draw.draw_probs
+        mask=mask,
+        counts=counts,
+        marginals=qf * draw.marginals,
+        draw_probs=qf * draw.draw_probs,
     )
 
 
 def availability_weights(
     draw: SampleResult, lam: jax.Array, q: jax.Array, procedure: str, budget: int
 ) -> jax.Array:
-    """Estimator weights with the 1/q availability correction."""
+    """Estimator weights with the 1/q availability correction (legacy
+    two-step form: ``draw`` is availability-MASKED but its probabilities are
+    the sampler's own, i.e. ``available_draw(draw, avail)`` without ``q``).
+
+    Prefer composing via ``available_draw(draw, avail, q)`` + plain
+    ``client_weights`` — it is the same correction by construction.  A drawn
+    client with ``q_i == 0`` is a modeling error (its update is never
+    observable): on the host path this raises :class:`ZeroAvailabilityError`;
+    in-trace (where raising is impossible) the weight is masked to zero.
+    """
     from repro.core.estimator import client_weights
 
+    q_arr = jnp.asarray(q, jnp.float32)
     w = client_weights(draw, lam, procedure, budget)
-    return w / jnp.maximum(jnp.asarray(q), 1e-30)
+    concrete = not any(
+        isinstance(x, jax.core.Tracer) for x in (draw.mask, q_arr, w)
+    )
+    if concrete:
+        bad = np.asarray(jnp.logical_and(draw.mask, q_arr <= 0.0))
+        if bad.any():
+            raise ZeroAvailabilityError(
+                f"clients {np.nonzero(bad)[0].tolist()} were drawn with "
+                "availability probability q == 0; no finite importance "
+                "weight corrects for a never-observable client"
+            )
+    return jnp.where(q_arr > 0.0, w / jnp.where(q_arr > 0.0, q_arr, 1.0), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Availability processes (FaultSpec.availability)
+# ---------------------------------------------------------------------------
+
+
+def availability_init(fault: Any, n: int) -> jax.Array | None:
+    """Carried chain state for the availability process, or ``None``.
+
+    Only the Markov on/off process is stateful: its (N,) bool chain starts
+    all-on (a deterministic warm start — round 0's conditional availability
+    is then exactly ``1 - p_off``, which the correction uses, so the
+    estimator is unbiased from the first round)."""
+    if getattr(fault, "availability", None) == "markov":
+        return jnp.ones((n,), bool)
+    return None
+
+
+def availability_step(
+    fault: Any, chain: jax.Array | None, t: jax.Array, key: jax.Array, n: int
+):
+    """One round of the availability process.
+
+    Returns ``(mask, q, new_chain)``: the (N,) bool availability mask A^t,
+    the (N,) f32 per-client availability probability ``q^t`` the 1/q
+    correction must use — for the Markov chain this is the probability
+    CONDITIONAL on the carried previous state, which is what makes the
+    corrected estimator unbiased round by round — and the advanced chain
+    state (``chain`` unchanged for the stateless processes).
+    """
+    mode = fault.availability
+    kw = dict(fault.availability_kwargs)
+    if mode == "bernoulli":
+        q = jnp.broadcast_to(
+            jnp.asarray(kw.get("q", 0.9), jnp.float32), (n,)
+        ).astype(jnp.float32)
+        mask = jax.random.uniform(key, (n,)) < q
+        return mask, q, chain
+    if mode == "markov":
+        p_on = float(kw.get("p_on", 0.5))  # P(off -> on)
+        p_off = float(kw.get("p_off", 0.5))  # P(on -> off)
+        q = jnp.where(chain, 1.0 - p_off, p_on).astype(jnp.float32)
+        mask = jax.random.uniform(key, (n,)) < q
+        return mask, q, mask
+    if mode == "diurnal":
+        # Deterministic schedule: client i is on duty when the fractional
+        # phase of (t / period + i / N) falls inside the duty cycle.  q is
+        # exactly the 0/1 mask — offline clients are excluded (weight zero),
+        # not importance-corrected (no finite weight exists for q == 0).
+        period = float(kw.get("period", 24.0))
+        duty = float(kw.get("duty", 0.5))
+        phase = jnp.arange(n, dtype=jnp.float32) / jnp.float32(n)
+        frac = jnp.mod(
+            jnp.asarray(t, jnp.float32) / jnp.float32(period) + phase, 1.0
+        )
+        mask = frac < jnp.float32(duty)
+        return mask, mask.astype(jnp.float32), chain
+    raise ValueError(f"unknown availability process {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Latency / deadline stragglers (FaultSpec.deadline, .latency)
+# ---------------------------------------------------------------------------
+
+
+def latency_draw(fault: Any, shape: tuple, key: jax.Array) -> jax.Array:
+    """Per-client latency sample from the spec-configured distribution."""
+    dist = fault.latency
+    kw = dict(fault.latency_kwargs)
+    if dist == "exponential":
+        scale = float(kw.get("scale", 1.0))
+        return scale * jax.random.exponential(key, shape, jnp.float32)
+    if dist == "uniform":
+        lo = float(kw.get("lo", 0.0))
+        hi = float(kw.get("hi", 1.0))
+        return jax.random.uniform(key, shape, jnp.float32, lo, hi)
+    if dist == "lognormal":
+        mu = float(kw.get("mu", 0.0))
+        sigma = float(kw.get("sigma", 1.0))
+        return jnp.exp(mu + sigma * jax.random.normal(key, shape, jnp.float32))
+    raise ValueError(f"unknown latency distribution {dist!r}")
+
+
+def deadline_survival(fault: Any) -> float:
+    """P(latency <= deadline) as a static build-time float — the survivor
+    weights are rescaled by its inverse so deadline dropout stays unbiased:
+    E[1{survive} w g / r] = w g.  Raises when the survival probability is
+    (numerically) zero: every client would always miss the deadline and no
+    reweighting can recover the estimate."""
+    d = float(fault.deadline)
+    dist = fault.latency
+    kw = dict(fault.latency_kwargs)
+    if dist == "exponential":
+        scale = float(kw.get("scale", 1.0))
+        r = 1.0 - math.exp(-d / scale)
+    elif dist == "uniform":
+        lo = float(kw.get("lo", 0.0))
+        hi = float(kw.get("hi", 1.0))
+        r = 1.0 if hi <= lo else min(max((d - lo) / (hi - lo), 0.0), 1.0)
+        if hi <= lo and d < lo:
+            r = 0.0
+    elif dist == "lognormal":
+        mu = float(kw.get("mu", 0.0))
+        sigma = float(kw.get("sigma", 1.0))
+        if d <= 0.0:
+            r = 0.0
+        else:
+            r = 0.5 * (1.0 + math.erf((math.log(d) - mu) / (sigma * math.sqrt(2.0))))
+    else:
+        raise ValueError(f"unknown latency distribution {dist!r}")
+    if r <= 1e-12:
+        raise ValueError(
+            f"deadline={d} gives survival probability ~{r:.3g} under "
+            f"latency={dist!r} {dict(kw)}: every client always misses the "
+            "deadline and no reweighting can keep the estimator unbiased"
+        )
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Fault state: the TrainState-carried pytree
+# ---------------------------------------------------------------------------
+
+
+def fault_state_init(fault: Any, n: int, d_dim: int = 0) -> dict:
+    """The fault layer's carried state: a (possibly empty) dict pytree that
+    lives in ``TrainState.faults`` so every piece of fault dynamics —
+    availability chain, stale-delta buffer — rides segment boundaries and
+    checkpoints bit-for-bit.  Which keys exist is a static function of the
+    fault config (stable treedef per spec):
+
+    * ``chain`` — (N,) bool Markov availability state (markov mode only);
+    * ``buf``   — the (B, D) stale-delta ring: ``delta`` (B, D) f32,
+      ``dispatch``/``arrival`` (B,) int32, ``valid`` (B,) bool
+      (``async_buffer > 0`` only; D is the flattened update dimension).
+    """
+    state: dict = {}
+    chain = availability_init(fault, n)
+    if chain is not None:
+        state["chain"] = chain
+    b = int(getattr(fault, "async_buffer", 0) or 0)
+    if b > 0:
+        state["buf"] = {
+            "delta": jnp.zeros((b, int(d_dim)), jnp.float32),
+            "dispatch": jnp.zeros((b,), jnp.int32),
+            "arrival": jnp.zeros((b,), jnp.int32),
+            "valid": jnp.zeros((b,), bool),
+        }
+    return state
+
+
+def abstract_fault_state(fault: Any, n: int, d_dim: int = 0):
+    """ShapeDtypeStruct pytree of ``fault_state_init`` (no allocation)."""
+    return jax.eval_shape(lambda: fault_state_init(fault, n, d_dim))
+
+
+# ---------------------------------------------------------------------------
+# Buffered-asynchronous aggregation (FaultSpec.async_buffer)
+# ---------------------------------------------------------------------------
+
+
+def _round_time(fault: Any) -> float:
+    rt = getattr(fault, "round_time", None)
+    if rt is None:
+        rt = getattr(fault, "deadline", None)
+    return float(rt) if rt is not None else 1.0
+
+
+def async_step(fault: Any, buf: dict, u_vec: jax.Array, t: jax.Array, key: jax.Array):
+    """One round of the stale-delta ring buffer.
+
+    The round's aggregate ``u_vec`` (flattened, (D,)) is dispatched at round
+    ``t`` with arrival round ``t + delay`` where ``delay`` derives from an
+    in-trace latency sample quantized by ``round_time`` and clipped to
+    ``B - 1`` — the clip guarantees a slot is always drained before the ring
+    reuses it, so no pending delta is ever overwritten.  Every buffered delta
+    whose arrival round has come is applied with a
+    ``staleness_discount ** (t - dispatch)`` factor; ``delay == 0``
+    degenerates to synchronous aggregation.
+
+    Returns ``(new_buf, apply_vec, n_arrived)`` with ``apply_vec`` the (D,)
+    staleness-discounted sum of arrived deltas for this round's server step.
+    """
+    b = int(fault.async_buffer)
+    rho = jnp.float32(fault.staleness_discount)
+    rt = _round_time(fault)
+    t = jnp.asarray(t, jnp.int32)
+    lat = latency_draw(fault, (), key)
+    delay = jnp.clip(
+        jnp.floor(lat / jnp.float32(rt)).astype(jnp.int32), 0, b - 1
+    )
+    slot = jnp.mod(t, b)
+    delta = jax.lax.dynamic_update_index_in_dim(
+        buf["delta"], u_vec.astype(jnp.float32), slot, 0
+    )
+    dispatch = buf["dispatch"].at[slot].set(t)
+    arrival = buf["arrival"].at[slot].set(t + delay)
+    valid = buf["valid"].at[slot].set(True)
+    arrived = jnp.logical_and(valid, arrival <= t)
+    disc = rho ** (t - dispatch).astype(jnp.float32)
+    coef = jnp.where(arrived, disc, 0.0)
+    apply_vec = coef @ delta  # (B,) @ (B, D) -> (D,)
+    new_buf = {
+        "delta": delta,
+        "dispatch": dispatch,
+        "arrival": arrival,
+        "valid": jnp.logical_and(valid, ~arrived),
+    }
+    return new_buf, apply_vec, jnp.sum(arrived.astype(jnp.int32))
+
+
+def flush_pending(buf: dict, t_end, rho: float) -> jax.Array:
+    """Final-boundary flush: the staleness-discounted sum of every delta
+    still pending when the horizon ends.  Mid-run segment boundaries leave
+    the buffer intact in the carry (segmentation stays bitwise-neutral even
+    in async mode); only the end of the horizon drains it, deterministically
+    from the carried state — a resumed run flushes identically."""
+    t_end = jnp.asarray(t_end, jnp.int32)
+    disc = jnp.float32(rho) ** (t_end - buf["dispatch"]).astype(jnp.float32)
+    coef = jnp.where(buf["valid"], disc, 0.0)
+    return coef @ buf["delta"]
+
+
+# ---------------------------------------------------------------------------
+# Flattened-update helpers (the (B, D) buffer's D axis)
+# ---------------------------------------------------------------------------
+
+
+def flat_dim(tree) -> int:
+    """Total element count of a pytree (works on ShapeDtypeStructs too)."""
+    return int(
+        sum(
+            int(np.prod(leaf.shape, dtype=np.int64)) if leaf.shape else 1
+            for leaf in jax.tree_util.tree_leaves(tree)
+        )
+    )
+
+
+def tree_to_vec(tree) -> jax.Array:
+    """Pytree of arrays -> one (D,) f32 vector (leaf-order concatenation)."""
+    return jnp.concatenate(
+        [jnp.ravel(leaf).astype(jnp.float32) for leaf in jax.tree_util.tree_leaves(tree)]
+    )
+
+
+def vec_to_tree(vec: jax.Array, like):
+    """(D,) vector -> pytree shaped/dtyped like ``like`` (tree_to_vec inverse)."""
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    out, off = [], 0
+    for leaf in leaves:
+        size = int(np.prod(leaf.shape, dtype=np.int64)) if leaf.shape else 1
+        out.append(vec[off : off + size].reshape(leaf.shape).astype(leaf.dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -86,6 +86,7 @@ import numpy as np
 __all__ = [
     "CohortSelection",
     "select_cohort",
+    "mask_selection",
     "scatter_cohort",
     "weighted_delta_sum",
     "host_gather_cohort_batches",
@@ -126,6 +127,35 @@ def select_cohort(
     n_kept = jnp.sum(valid.astype(jnp.int32))
     return CohortSelection(
         ids=ids, weights=w, valid=valid, n_included=n_inc, n_dropped=n_inc - n_kept
+    )
+
+
+def mask_selection(
+    sel: CohortSelection, keep: jax.Array, rescale: float | jax.Array = 1.0
+) -> CohortSelection:
+    """Demote slots with ``keep == False`` to inert padding, post-selection.
+
+    The deadline-straggler hook (``core.stragglers``): clients past the round
+    deadline are masked out of the cohort AFTER local training was scheduled
+    — their (C,)-slot compute already happened, but the slot's weight,
+    validity, and hence feedback and loss contribution are zeroed exactly
+    like the inert-padding contract above, so the O(C*D) aggregation path is
+    untouched.  Survivors' weights are multiplied by ``rescale`` (the
+    ``1 / P(latency <= deadline)`` unbiasedness correction — a static float,
+    so ``rescale == 1.0`` keeps the weights bitwise).  Newly-dropped slots
+    are accounted in ``n_dropped``.
+    """
+    valid = jnp.logical_and(sel.valid, keep)
+    w = jnp.where(
+        valid, sel.weights * jnp.asarray(rescale, sel.weights.dtype), 0.0
+    )
+    n_kept = jnp.sum(valid.astype(jnp.int32))
+    return CohortSelection(
+        ids=sel.ids,
+        weights=w,
+        valid=valid,
+        n_included=sel.n_included,
+        n_dropped=sel.n_included - n_kept,
     )
 
 

@@ -37,7 +37,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.fed.cohort import select_cohort, weighted_delta_sum
+from repro.fed.cohort import mask_selection, select_cohort, weighted_delta_sum
 from repro.fed.state import (
     TrainState,
     build_placement,
@@ -63,6 +63,12 @@ class RoundSpec:
     local_lr: float = 0.02
     server_lr: float = 1.0
     local_batch: int = 2  # B_local (used by the compiled scan's device gather)
+    # Deployment-realism fault layer (a ``repro.api.FaultSpec`` or None —
+    # see ``FedConfig.faults``).  None builds the exact pre-fault scan body;
+    # enabled faults require the segment-shaped runner
+    # (``build_fed_scan_segment``) — the monolithic ``build_fed_scan`` and
+    # the host launcher loop raise.
+    faults: object | None = None
 
 
 def _tree_sq_norm(delta):
@@ -209,6 +215,13 @@ def build_fed_scan(
     For the preemption-safe segment-shaped form of the same computation, see
     ``build_fed_scan_segment``.
     """
+    if spec.faults is not None:
+        raise ValueError(
+            "RoundSpec.faults requires the segment-shaped runner "
+            "(build_fed_scan_segment): the fault state (availability chain, "
+            "stale-delta buffer) lives in the TrainState carry, which the "
+            "monolithic build_fed_scan signature cannot thread"
+        )
     body = _build_scan_body(cfg, spec, sampler, dataset, mesh, constrain)
 
     donate = (0,) if jax.default_backend() != "cpu" else ()
@@ -225,12 +238,25 @@ def build_fed_scan(
 
 def _build_scan_body(cfg, spec, sampler, dataset, mesh, constrain):
     """The per-round scan body shared by ``build_fed_scan`` (monolithic) and
-    ``build_fed_scan_segment``: (params, s_state) carry, (2, key) xs."""
-    from repro.core import estimator
+    ``build_fed_scan_segment``: (params, s_state) carry, (2, key) xs.
+
+    With ``spec.faults`` set the body grows the deployment-realism layer
+    (``repro.core.stragglers``; same semantics as the simulation stack's
+    ``fed.server._build_round_body``): carry becomes
+    ``(params, s_state, f_state)`` and xs ``(t, k_draw, k_data)`` — the round
+    index feeds the availability process and the async ring."""
+    from repro.core import estimator, stragglers
 
     lam = dataset.lam
     n = dataset.n_clients
     round_step = build_round_step(cfg, spec, constrain)
+
+    faults = spec.faults
+    fault_on = faults is not None
+    avail_on = fault_on and faults.availability is not None
+    deadline_on = fault_on and faults.deadline is not None
+    async_on = fault_on and int(faults.async_buffer) > 0
+    surv = stragglers.deadline_survival(faults) if deadline_on else 1.0
 
     if mesh is not None:
         from jax.sharding import NamedSharding, PartitionSpec
@@ -273,17 +299,68 @@ def _build_scan_body(cfg, spec, sampler, dataset, mesh, constrain):
 
         return shard_batches(zero_pad(feats)), shard_batches(zero_pad(labs))
 
-    def body(carry, keys_t):
-        params, s_state = carry
-        k_draw, k_data = keys_t[0], keys_t[1]
+    def body(carry, xs):
+        if fault_on:
+            params, s_state, f_state = carry
+            t, k_draw, k_data = xs
+        else:
+            params, s_state = carry
+            f_state = {}
+            t = None
+            k_draw, k_data = xs[0], xs[1]
         p = sampler.probabilities(s_state)
         draw = sampler.sample_from(p, k_draw)
+        if avail_on:
+            # Same fold_in streams (101/102/103) as the simulation stack, off
+            # the draw key; the draw's own key material is untouched.
+            avail_mask, q_t, new_chain = stragglers.availability_step(
+                faults,
+                f_state.get("chain"),
+                t,
+                jax.random.fold_in(k_draw, 101),
+                n,
+            )
+            avail_mask = sampler.shard_constrain(avail_mask)
+            q_t = sampler.shard_constrain(q_t)
+            draw = stragglers.available_draw(draw, avail_mask, q_t)
+            if "chain" in f_state:
+                f_state = {**f_state, "chain": sampler.shard_constrain(new_chain)}
         w_full = estimator.client_weights(draw, lam, sampler.procedure, sampler.budget)
         sel = select_cohort(
             draw.mask, w_full, spec.cohort, jax.random.fold_in(k_draw, 1)
         )
+        overflow_dropped = sel.n_dropped
+        deadline_dropped = jnp.zeros((), jnp.int32)
+        if deadline_on:
+            # Local training below still runs for every C slot (the server
+            # already scheduled it); late slots are demoted to inert padding
+            # so only the aggregation weights / feedback / loss see the drop,
+            # with survivors rescaled by 1/surv for unbiasedness.
+            lat_c = stragglers.latency_draw(
+                faults, (sel.valid.shape[0],), jax.random.fold_in(k_draw, 102)
+            )
+            late_c = jnp.logical_and(sel.valid, lat_c > jnp.float32(faults.deadline))
+            sel = mask_selection(sel, ~late_c, 1.0 / surv)
+            deadline_dropped = jnp.sum(late_c.astype(jnp.int32))
         tokens, targets = gather_cohort(sel, k_data)
-        params, norms, loss = round_step(params, tokens, targets, sel.weights)
+        new_params, norms, loss = round_step(params, tokens, targets, sel.weights)
+        if async_on:
+            # round_step already applied x - server_lr * d; recover the
+            # update u = server_lr * d, route it through the carried (B, D)
+            # stale-delta ring, and apply only what arrived this round.
+            u = jax.tree_util.tree_map(lambda a, b: a - b, params, new_params)
+            new_buf, apply_vec, _ = stragglers.async_step(
+                faults,
+                f_state["buf"],
+                stragglers.tree_to_vec(u),
+                t,
+                jax.random.fold_in(k_draw, 103),
+            )
+            f_state = {**f_state, "buf": new_buf}
+            d_apply = stragglers.vec_to_tree(apply_vec, params)
+            params = jax.tree_util.tree_map(lambda a, g: a - g, params, d_apply)
+        else:
+            params = new_params
         # Sampler feedback: (N,)-vector scatter of the (C,) cohort norms,
         # constrained back onto the sampler's (N,)-shard layout so the
         # scatter result never materializes replicated at scale.
@@ -296,8 +373,12 @@ def _build_scan_body(cfg, spec, sampler, dataset, mesh, constrain):
         metrics = {
             "loss": loss,
             "cohort_size": jnp.sum(sel.valid.astype(jnp.int32)),
-            "dropped": sel.n_dropped,
+            "dropped": overflow_dropped,
         }
+        if deadline_on:
+            metrics["deadline_dropped"] = deadline_dropped
+        if fault_on:
+            return (params, s_state, f_state), metrics
         return (params, s_state), metrics
 
     return body
@@ -319,11 +400,20 @@ def scan_body_for_lint(
     model parameters come from ``jax.eval_shape`` of ``transformer.
     init_params``, so no weights are materialized and the static checkers in
     ``repro.analysis.lint`` can trace the real round program for free."""
+    from repro.core import stragglers
+
     body = _build_scan_body(cfg, spec, sampler, dataset, mesh, constrain)
     key = jax.eval_shape(lambda: jax.random.PRNGKey(0))
     params = jax.eval_shape(lambda k: transformer.init_params(cfg, k), key)
     carry = (params, sampler.abstract_state())
     xs = jax.eval_shape(lambda k: jnp.stack([k, k]), key)
+    if spec.faults is not None:
+        carry = carry + (
+            stragglers.abstract_fault_state(
+                spec.faults, dataset.n_clients, stragglers.flat_dim(params)
+            ),
+        )
+        xs = (jax.ShapeDtypeStruct((), jnp.int32), key, key)
     return body, (carry, xs)
 
 
@@ -361,22 +451,36 @@ def build_fed_scan_segment(
     The launcher round step is stateless on the server side (``server_lr``
     applied directly), so ``TrainState.opt_state`` is ``()``.
     """
+    from repro.core import stragglers
+
     body = _build_scan_body(cfg, spec, sampler, dataset, mesh, constrain)
+    fault_on = spec.faults is not None
 
     def derive_step(k, _):
         k, k_draw, k_data = jax.random.split(k, 3)
         return k, jnp.stack([k_draw, k_data])
 
+    def fault_init(params):
+        return stragglers.fault_state_init(
+            spec.faults, dataset.n_clients, stragglers.flat_dim(params)
+        )
+
     def make_state(params, s_state, key, total_rounds: int) -> TrainState:
+        f_state = fault_init(params) if fault_on else ()
+        carry0 = (params, s_state) + ((f_state,) if fault_on else ())
+        xs0 = (
+            (jnp.zeros((), jnp.int32), key, key)
+            if fault_on
+            else jnp.stack([key, key])
+        )
         return TrainState(
             params=params,
             opt_state=(),
             sampler=s_state,
-            metrics=init_metric_buffers(
-                body, (params, s_state), jnp.stack([key, key]), total_rounds
-            ),
+            metrics=init_metric_buffers(body, carry0, xs0, total_rounds),
             round=jnp.zeros((), jnp.int32),
             key=key,
+            faults=f_state,
         )
 
     placement = None
@@ -386,24 +490,29 @@ def build_fed_scan_segment(
         # 1-round buffer set is enough to derive the placement pytree.
         key_s = jax.eval_shape(lambda: jax.random.PRNGKey(0))
         params_s = jax.eval_shape(lambda k: transformer.init_params(cfg, k), key_s)
+        f_state_s = jax.eval_shape(fault_init, params_s) if fault_on else ()
+        carry_s = (params_s, sampler.abstract_state()) + (
+            (f_state_s,) if fault_on else ()
+        )
+        xs_s = (
+            (jax.ShapeDtypeStruct((), jnp.int32), key_s, key_s)
+            if fault_on
+            else jax.eval_shape(lambda k: jnp.stack([k, k]), key_s)
+        )
         template = TrainState(
             params=params_s,
             opt_state=(),
             sampler=sampler.abstract_state(),
-            metrics=init_metric_buffers(
-                body,
-                (params_s, sampler.abstract_state()),
-                jax.eval_shape(lambda k: jnp.stack([k, k]), key_s),
-                1,
-            ),
+            metrics=init_metric_buffers(body, carry_s, xs_s, 1),
             round=jax.ShapeDtypeStruct((), jnp.int32),
             key=key_s,
+            faults=f_state_s,
         )
         placement = build_placement(template, sampler)
 
     segment = make_segment_fn(
         body, derive_step,
-        with_opt_state=False, with_round_index=False, donate=donate,
-        placement=placement,
+        with_opt_state=False, with_round_index=fault_on, with_faults=fault_on,
+        donate=donate, placement=placement,
     )
     return segment, make_state

@@ -70,7 +70,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import estimator, regret, samplers
+from repro.core import estimator, regret, samplers, stragglers
 from repro.core.regret import RegretTracker
 from repro.fed import client as fed_client
 from repro.fed import cohort as fed_cohort
@@ -135,6 +135,14 @@ class FedConfig:
     # every boundary.  0 = whole horizon as one segment (the monolithic
     # scan).  Bitwise-neutral: any value yields identical results.
     ckpt_every: int = 0
+    # Deployment-realism fault layer: a ``repro.api.FaultSpec`` (duck-typed —
+    # anything with its fields works) or None.  None (default) builds the
+    # exact pre-fault round body, so existing runs stay bitwise.  When set,
+    # the round body threads the availability process / deadline-straggler
+    # dropout / buffered-async aggregation from ``repro.core.stragglers``
+    # through the traced round, with the fault state carried in
+    # ``TrainState.faults``.
+    faults: object | None = None
 
     def cohort_slots(self, n_clients: int) -> int:
         c = 2 * self.budget if self.cohort is None else int(self.cohort)
@@ -149,6 +157,9 @@ class History:
     estimator_sq_error: list = dataclasses.field(default_factory=list)
     cohort_size: list = dataclasses.field(default_factory=list)
     cohort_dropped: list = dataclasses.field(default_factory=list)  # deployable
+    # Per-round count of clients that missed the FaultSpec deadline (faulted
+    # runs with deadline set; empty otherwise).
+    deadline_dropped: list = dataclasses.field(default_factory=list)
     regret: RegretTracker | None = None
     wall_time_s: float = 0.0
     final_params: object = None  # trained parameter pytree (trajectory probe)
@@ -240,7 +251,17 @@ def _build_round_body(task: Task, dataset, sampler: samplers.Sampler, cfg: FedCo
     cohort width — O(C*D) with no (N, D) buffer — unless
     ``cfg.exact_oracle_equiv`` asks for the legacy N-width scatter, which
     reuses the oracle contraction and is bit-identical to it when
-    ``|S| <= C`` (module docstring; fed/cohort.py "Aggregation width")."""
+    ``|S| <= C`` (module docstring; fed/cohort.py "Aggregation width").
+
+    ``cfg.faults`` (a ``repro.api.FaultSpec``) switches on the deployment-
+    realism layer at BUILD time — carry grows a trailing fault-state element
+    and the body threads ``core.stragglers``: the availability process
+    intersects the draw (composed ``q * p`` correction, so the estimator
+    stays unbiased), deadline stragglers are masked out after local training
+    with survivor weights rescaled by ``1 / P(latency <= deadline)``, and
+    buffered-async mode routes the round's aggregate through a carried
+    (B, D) stale-delta ring instead of applying it immediately.  With
+    ``faults=None`` the built body is the exact pre-fault program."""
 
     lam = dataset.lam
     n = dataset.n_clients
@@ -250,22 +271,68 @@ def _build_round_body(task: Task, dataset, sampler: samplers.Sampler, cfg: FedCo
         c_slots = cfg.cohort_slots(n)
         cohort_clients = _build_cohort_clients(task, dataset, cfg)
 
+    faults = cfg.faults
+    fault_on = faults is not None
+    avail_on = fault_on and faults.availability is not None
+    deadline_on = fault_on and faults.deadline is not None
+    async_on = fault_on and int(faults.async_buffer) > 0
+    # Static build-time survival probability: the unbiasedness rescale for
+    # deadline survivors (raises if the deadline is unsatisfiable).
+    surv = stragglers.deadline_survival(faults) if deadline_on else 1.0
+
     def body(carry, xs):
-        params, opt_state, s_state = carry
+        if fault_on:
+            params, opt_state, s_state, f_state = carry
+        else:
+            params, opt_state, s_state = carry
+            f_state = {}
         t, k_data, k_sample = xs
 
         # Solve p~ once; reuse it for the draw AND the regret diagnostics
         # (the seed loop solved twice and diagnosed off draw.marginals).
         p_marg = sampler.probabilities(s_state)
         draw = sampler.sample_from(p_marg, k_sample)
+        if avail_on:
+            # Availability intersects the draw; composing q into the draw's
+            # probabilities makes the plain client_weights call below the
+            # availability-corrected (1/(q p)) estimator.  Distinct fold_in
+            # streams (101/102/103) keep the sampler's own key untouched.
+            avail_mask, q_t, new_chain = stragglers.availability_step(
+                faults,
+                f_state.get("chain"),
+                t,
+                jax.random.fold_in(k_sample, 101),
+                n,
+            )
+            avail_mask = sampler.shard_constrain(avail_mask)
+            q_t = sampler.shard_constrain(q_t)
+            draw = stragglers.available_draw(draw, avail_mask, q_t)
+            if "chain" in f_state:
+                f_state = {**f_state, "chain": sampler.shard_constrain(new_chain)}
         weights = estimator.client_weights(draw, lam, sampler.procedure, sampler.budget)
 
+        deadline_dropped = jnp.zeros((), jnp.int32)
         if cfg.oracle_metrics:
             deltas, losses, feedback_full = all_clients(params, k_data)
             feedback_full = sampler.shard_constrain(feedback_full)
-            feedback = feedback_full * draw.mask
+            active = draw.mask
+            if deadline_on:
+                # Per-client latency; clients past the deadline report
+                # nothing this round.  Survivor weights / surv keeps the
+                # estimate unbiased (E[1{survive}] = surv, independent of
+                # the draw).
+                lat = stragglers.latency_draw(
+                    faults, (n,), jax.random.fold_in(k_sample, 102)
+                )
+                late = jnp.logical_and(draw.mask, lat > jnp.float32(faults.deadline))
+                active = jnp.logical_and(draw.mask, ~late)
+                weights = jnp.where(late, 0.0, weights * jnp.float32(1.0 / surv))
+                deadline_dropped = jnp.sum(late.astype(jnp.int32))
+            feedback = feedback_full * active
             train_loss = jnp.sum(lam * losses)
-            cohort_size = draw.size
+            cohort_size = (
+                jnp.sum(active.astype(jnp.int32)) if deadline_on else draw.size
+            )
             # sq_err shares the one pass over the stacked (N, ...) deltas.
             d_est, sq_err = estimator.aggregate_and_error(deltas, weights, lam)
         else:
@@ -274,7 +341,22 @@ def _build_round_body(task: Task, dataset, sampler: samplers.Sampler, cfg: FedCo
             sel = fed_cohort.select_cohort(
                 draw.mask, weights, c_slots, jax.random.fold_in(k_sample, 1)
             )
+            overflow_dropped = sel.n_dropped
             deltas_c, losses_c, norms_c = cohort_clients(params, k_data, sel.ids)
+            if deadline_on:
+                # Deadline dropout AFTER local training is scheduled: the C
+                # slots' compute already ran; late slots are demoted to inert
+                # padding (weight/validity/feedback zeroed) and survivors are
+                # rescaled by 1/surv — the O(C*D) aggregation below is
+                # untouched (fed/cohort.py mask_selection).
+                lat_c = stragglers.latency_draw(
+                    faults, (c_slots,), jax.random.fold_in(k_sample, 102)
+                )
+                late_c = jnp.logical_and(
+                    sel.valid, lat_c > jnp.float32(faults.deadline)
+                )
+                sel = fed_cohort.mask_selection(sel, ~late_c, 1.0 / surv)
+                deadline_dropped = jnp.sum(late_c.astype(jnp.int32))
             # Sampler feedback is an (N,)-vector scatter of a (C,) vector —
             # the sampler state is legitimately N-sized; only the (N, D)
             # delta pytree scatter is the scale problem.
@@ -306,7 +388,19 @@ def _build_round_body(task: Task, dataset, sampler: samplers.Sampler, cfg: FedCo
                 )
         # sq_err is recorded only in oracle mode; the deployable branches'
         # error row is dead code and fused away.
-        params, opt_state = cfg.server_opt.apply(params, d_est, opt_state)
+        if async_on:
+            # Buffered-async: the round's aggregate enters the carried (B, D)
+            # stale-delta ring; the server applies only the staleness-
+            # discounted deltas whose arrival round has come (possibly none).
+            u_vec = stragglers.tree_to_vec(d_est)
+            new_buf, apply_vec, _ = stragglers.async_step(
+                faults, f_state["buf"], u_vec, t, jax.random.fold_in(k_sample, 103)
+            )
+            f_state = {**f_state, "buf": new_buf}
+            d_apply = stragglers.vec_to_tree(apply_vec, d_est)
+            params, opt_state = cfg.server_opt.apply(params, d_apply, opt_state)
+        else:
+            params, opt_state = cfg.server_opt.apply(params, d_est, opt_state)
 
         # The server only observes sampled feedback (Theorem 5.2's partial
         # feedback): masked to the cohort it actually contacted.
@@ -316,8 +410,10 @@ def _build_round_body(task: Task, dataset, sampler: samplers.Sampler, cfg: FedCo
             "train_loss": train_loss,
             "cohort_size": cohort_size,
         }
+        if deadline_on:
+            metrics["deadline_dropped"] = deadline_dropped
         if not cfg.oracle_metrics:
-            metrics["dropped"] = sel.n_dropped
+            metrics["dropped"] = overflow_dropped
         if cfg.oracle_metrics:
             if sampler.procedure == "isp":
                 p_eff = p_marg
@@ -340,6 +436,8 @@ def _build_round_body(task: Task, dataset, sampler: samplers.Sampler, cfg: FedCo
                 lambda p: jnp.full((), jnp.nan, jnp.float32),
                 params,
             )
+        if fault_on:
+            return (params, opt_state, s_state, f_state), metrics
         return (params, opt_state, s_state), metrics
 
     return body
@@ -365,6 +463,12 @@ def round_body_for_lint(
     opt_state = jax.eval_shape(cfg.server_opt.init, params)
     s_state = sampler.abstract_state()
     carry = (params, opt_state, s_state)
+    if cfg.faults is not None:
+        carry = carry + (
+            stragglers.abstract_fault_state(
+                cfg.faults, dataset.n_clients, stragglers.flat_dim(params)
+            ),
+        )
     xs = (jax.ShapeDtypeStruct((), jnp.int32), key, key)
     return body, (carry, xs)
 
@@ -378,6 +482,10 @@ def _materialize_history(metrics: dict, cfg: FedConfig, has_eval: bool) -> Histo
     hist.cohort_size = [int(x) for x in np.asarray(metrics["cohort_size"])]
     if "dropped" in metrics:
         hist.cohort_dropped = [int(x) for x in np.asarray(metrics["dropped"])]
+    if "deadline_dropped" in metrics:
+        hist.deadline_dropped = [
+            int(x) for x in np.asarray(metrics["deadline_dropped"])
+        ]
     if cfg.oracle_metrics:
         hist.estimator_sq_error = [float(x) for x in np.asarray(metrics["sq_error"])]
         hist.regret = RegretTracker.from_arrays(
@@ -422,6 +530,24 @@ def _score_history_plan(cfg: FedConfig, n_clients: int):
     return int(cfg.rounds)
 
 
+def _flush_async(params, opt_state, f_state, cfg: FedConfig):
+    """End-of-horizon flush of the buffered-async stale-delta ring: apply the
+    staleness-discounted sum of every still-pending delta through the server
+    optimizer, once, after the last round.  Deterministic in the carried
+    buffer state — a preempted-and-resumed run reaches the identical buffer
+    and therefore the identical flush (mid-run segment boundaries do NOT
+    flush; the buffer rides the carry)."""
+    buf = f_state["buf"]
+    if not np.asarray(buf["valid"]).any():
+        return params
+    pending = stragglers.flush_pending(
+        buf, cfg.rounds, float(cfg.faults.staleness_discount)
+    )
+    d_pend = stragglers.vec_to_tree(pending, params)
+    params, _ = cfg.server_opt.apply(params, d_pend, opt_state)
+    return params
+
+
 def _derive_keys_step(k, _):
     """One link of the reference loop's chained per-round key derivation:
     ``key, k_data, k_sample = split(key, 3)``.  Both execution paths (and the
@@ -460,16 +586,27 @@ def build_segment_runner(
     re-time the same state; donation would invalidate it on non-CPU
     backends)."""
     body = _build_round_body(task, dataset, sampler, cfg, eval_data)
+    fault_on = cfg.faults is not None
 
     key = jax.random.PRNGKey(cfg.seed)
     key, init_key = jax.random.split(key)
     params = task.init(init_key)
     opt_state = cfg.server_opt.init(params)
     s_state = sampler.init()
+    f_state = (
+        stragglers.fault_state_init(
+            cfg.faults, dataset.n_clients, stragglers.flat_dim(params)
+        )
+        if fault_on
+        else ()
+    )
 
+    carry0 = (params, opt_state, s_state)
+    if fault_on:
+        carry0 = carry0 + (f_state,)
     metrics = init_metric_buffers(
         body,
-        (params, opt_state, s_state),
+        carry0,
         (jnp.zeros((), jnp.int32), key, key),
         cfg.rounds,
     )
@@ -490,14 +627,15 @@ def build_segment_runner(
         metrics=metrics,
         round=jnp.zeros((), jnp.int32),
         key=key,
+        faults=f_state,
     )
     placement = (
         build_placement(init_state, sampler) if sampler.shard is not None else None
     )
     segment = make_segment_fn(
         body, _derive_keys_step,
-        with_opt_state=True, with_round_index=True, donate=donate,
-        placement=placement,
+        with_opt_state=True, with_round_index=True, with_faults=fault_on,
+        donate=donate, placement=placement,
     )
     return segment, init_state
 
@@ -564,6 +702,8 @@ def run_federated(
         )
         jax.block_until_ready(state)
         params = state.params
+        if cfg.faults is not None and int(cfg.faults.async_buffer) > 0:
+            params = _flush_async(params, state.opt_state, state.faults, cfg)
         metrics = jax.tree_util.tree_map(np.asarray, state.metrics)
         if offload:
             metrics["scores"] = scores_host
@@ -573,6 +713,14 @@ def run_federated(
         params = task.init(init_key)
         opt_state = cfg.server_opt.init(params)
         s_state = sampler.init()
+        fault_on = cfg.faults is not None
+        f_state = (
+            stragglers.fault_state_init(
+                cfg.faults, dataset.n_clients, stragglers.flat_dim(params)
+            )
+            if fault_on
+            else ()
+        )
 
         # Per-round (k_data, k_sample) pairs, derived up front along the same
         # chained-split sequence the segmented runner walks.
@@ -589,17 +737,27 @@ def run_federated(
         step = jax.jit(body, donate_argnums=(0,) if donate else ())
         per_round = []
         for t in range(cfg.rounds):
+            carry_in = (params, opt_state, s_state)
+            if fault_on:
+                carry_in = carry_in + (f_state,)
             carry, m = step(
-                (params, opt_state, s_state),
+                carry_in,
                 (ts[t], round_keys[t, 0], round_keys[t, 1]),
             )
-            params, opt_state, s_state = carry
+            if fault_on:
+                params, opt_state, s_state, f_state = carry
+            else:
+                params, opt_state, s_state = carry
             # Host sync every round — the reference loop's defining trait.
             per_round.append(jax.tree_util.tree_map(np.asarray, m))
+        if fault_on and int(cfg.faults.async_buffer) > 0 and cfg.rounds > 0:
+            params = _flush_async(params, opt_state, f_state, cfg)
         if per_round:
             metrics = {k: np.stack([m[k] for m in per_round]) for k in per_round[0]}
         else:
             metrics = {"train_loss": np.zeros(0), "cohort_size": np.zeros(0, np.int32)}
+            if fault_on and cfg.faults.deadline is not None:
+                metrics["deadline_dropped"] = np.zeros(0, np.int32)
             if not cfg.oracle_metrics:
                 metrics["dropped"] = np.zeros(0, np.int32)
             if cfg.oracle_metrics:

@@ -32,6 +32,13 @@ needs to continue the run bit-for-bit must live here as an *array* leaf:
                    keys derive.  Each segment advances it by exactly
                    ``n_rounds`` chained splits, so any segmentation of the
                    horizon consumes the identical key stream.
+* ``faults``     — the fault layer's carried state when a
+                   ``repro.api.FaultSpec`` is enabled (Markov availability
+                   chain, buffered-async stale-delta ring —
+                   ``core.stragglers.fault_state_init``); ``()`` otherwise.
+                   Living here is what makes a SIGKILL'd faulted run resume
+                   bit-for-bit and keeps async segmentation bitwise-neutral
+                   (pending deltas ride the boundary instead of flushing).
 
 Segmentation is a pure reshaping of the horizon: for any ``ckpt_every`` the
 per-round bodies see the same carries, keys, and round indices, so results
@@ -73,6 +80,7 @@ class TrainState:
     metrics: Any
     round: jax.Array  # scalar int32 — next round to execute
     key: jax.Array  # PRNG key for the remaining rounds' key derivation
+    faults: Any = ()  # fault-layer carry (FaultSpec enabled) or ()
 
     def tree_flatten(self):
         children = (
@@ -82,6 +90,7 @@ class TrainState:
             self.metrics,
             self.round,
             self.key,
+            self.faults,
         )
         return children, None
 
@@ -146,6 +155,10 @@ def build_placement(template: TrainState, sampler) -> TrainState:
         metrics=jax.tree_util.tree_map(metric_rule, template.metrics),
         round=rep,
         key=rep,
+        # The fault carry follows the sampler rule: the (N,) Markov
+        # availability chain lives split along the sampler's mesh axis, the
+        # (B, D) stale-delta buffer (B != N) falls through to replicated.
+        faults=jax.tree_util.tree_map(sampler_rule, template.faults),
     )
 
 
@@ -155,6 +168,7 @@ def make_segment_fn(
     *,
     with_opt_state: bool,
     with_round_index: bool,
+    with_faults: bool = False,
     donate: bool = True,
     placement=None,
 ):
@@ -171,7 +185,10 @@ def make_segment_fn(
        (one chained-split link, returning ``(key, stacked pair)``) from
        ``state.key``;
     2. scans ``body`` over them — carry ``(params, opt_state, sampler)``
-       when ``with_opt_state`` else ``(params, sampler)``; xs
+       when ``with_opt_state`` else ``(params, sampler)``, with
+       ``state.faults`` appended as a trailing carry element when
+       ``with_faults`` (the fault layer's availability chain / stale-delta
+       buffer advance inside the scan exactly like the sampler state); xs
        ``(ts, pairs[:, 0], pairs[:, 1])`` with ``ts = round + arange`` when
        ``with_round_index`` else the raw ``pairs``;
     3. stitches the stacked per-round metrics into the full-horizon buffers
@@ -209,12 +226,18 @@ def make_segment_fn(
             carry = (state.params, state.opt_state, state.sampler)
         else:
             carry = (state.params, state.sampler)
+        if with_faults:
+            carry = carry + (state.faults,)
         if with_round_index:
             ts = state.round + jnp.arange(n_rounds, dtype=jnp.int32)
             xs = (ts, pairs[:, 0], pairs[:, 1])
         else:
             xs = pairs
         carry, stacked = jax.lax.scan(body, carry, xs)
+        if with_faults:
+            carry, f_state = carry[:-1], carry[-1]
+        else:
+            f_state = state.faults
         if with_opt_state:
             params, opt_state, s_state = carry
         else:
@@ -236,6 +259,7 @@ def make_segment_fn(
             metrics=metrics,
             round=state.round + n_rounds,
             key=key,
+            faults=f_state,
         )
 
     lint_info = {
@@ -243,6 +267,7 @@ def make_segment_fn(
         "derive_step": derive_step,
         "with_opt_state": with_opt_state,
         "with_round_index": with_round_index,
+        "with_faults": with_faults,
         "donate": donate,
         "donate_argnums": donate_argnums,
         "placement": placement,

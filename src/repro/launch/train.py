@@ -44,6 +44,7 @@ The driver is the deployable realization of Algorithm 1, in two modes:
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import signal
 import time
@@ -55,6 +56,7 @@ import numpy as np
 from repro.api import (
     ExecutionSpec,
     ExperimentSpec,
+    FaultSpec,
     FederationSpec,
     SamplerSpec,
     TaskSpec,
@@ -115,6 +117,15 @@ def make_parser() -> argparse.ArgumentParser:
         "and feedback update run shard-local (ExecutionSpec.sampler_axis)",
     )
     ap.add_argument(
+        "--faults", default="", metavar="JSON",
+        help="deployment-realism fault layer as a FaultSpec JSON object, "
+        "e.g. '{\"availability\": \"markov\", \"availability_kwargs\": "
+        "{\"p_on\": 0.7, \"p_off\": 0.2}, \"deadline\": 1.0}' — availability "
+        "processes, deadline stragglers (unbiased reweighting), and "
+        "buffered-async aggregation.  Requires --compiled (the fault state "
+        "lives in the scan carry)",
+    )
+    ap.add_argument(
         "--spec", default="",
         help="load the experiment from an ExperimentSpec JSON file (as "
         "emitted by --dump-spec); the experiment flags above are ignored",
@@ -167,6 +178,9 @@ def build_spec_from_args(args) -> ExperimentSpec:
             compiled=args.compiled,
             ckpt_every=args.ckpt_every,
             sampler_axis=args.shard_sampler or None,
+        ),
+        fault=(
+            FaultSpec(**json.loads(args.faults)) if args.faults else FaultSpec()
         ),
     )
 
@@ -250,11 +264,20 @@ def run_spec(spec: ExperimentSpec, *, ckpt: str = "", resume: bool = False) -> N
         dropped_total = int(np.sum(np.asarray(state.metrics["dropped"])))
         if dropped_total:
             print(f"cohort overflow drops: {dropped_total}")
+        if "deadline_dropped" in state.metrics:
+            dd = int(np.sum(np.asarray(state.metrics["deadline_dropped"])))
+            print(f"deadline straggler drops: {dd}")
         if ckpt:
             f = save_checkpoint(ckpt, {"params": params, "sampler": s_state})
             print("final checkpoint ->", f)
         return
 
+    if rspec.faults is not None:
+        raise SystemExit(
+            "fault injection (FaultSpec enabled) requires --compiled: the "
+            "fault state (availability chain, stale-delta buffer) lives in "
+            "the scan carry, which the per-round host loop does not thread"
+        )
     round_step = jax.jit(build_round_step(cfg, rspec), donate_argnums=(0,))
 
     dropped_total = 0

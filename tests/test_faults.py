@@ -1,0 +1,625 @@
+"""The fault-realism layer (FaultSpec): deployment realism as a spec axis.
+
+Contracts under test:
+
+* **Spec**: ``FaultSpec`` JSON round-trips losslessly, rejects unknown keys
+  and invalid values, changes the checkpoint fingerprint, and old 4-section
+  spec JSON (pre-fault) still loads.  A default-constructed (disabled)
+  ``FaultSpec`` projects ``faults=None`` into both legacy configs — the
+  build-time branch that keeps the unfaulted round body literally the
+  pre-fault program.
+* **Unbiasedness**: for EVERY registry sampler, the availability-composed
+  draw + deadline survivor reweighting keeps E[d^t] == sum_i lambda_i g_i
+  (Monte-Carlo against the no-fault estimator's target); the Markov
+  process's conditional-q correction is unbiased given the carried chain.
+* **Async determinism**: the stale-delta ring buffer applies exactly the
+  hand-computed staleness-discounted deltas for a constant latency, and
+  ``delay == 0`` degenerates to synchronous aggregation.
+* **Execution**: a faulted run is bitwise identical across compiled vs
+  reference, across segmentation boundaries, across SIGKILL/resume, and
+  (with a sharded sampler axis) across S=1 sharding; deadline drops surface
+  in ``History.deadline_dropped``.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import (
+    ExecutionSpec,
+    ExperimentSpec,
+    FaultSpec,
+    FederationSpec,
+    SamplerSpec,
+    TaskSpec,
+)
+from repro.checkpoint import CheckpointManager, config_fingerprint
+from repro.core import estimator, samplers, stragglers
+
+SUBPROC_ENV = {
+    "PYTHONPATH": "src",
+    "PATH": "/usr/bin:/bin",
+    "XLA_FLAGS": "--xla_force_host_platform_device_count=2",
+}
+
+FAULTED = FaultSpec(
+    availability="markov",
+    availability_kwargs={"p_on": 0.7, "p_off": 0.2},
+    deadline=1.0,
+    latency="exponential",
+    latency_kwargs={"scale": 0.5},
+    async_buffer=3,
+    staleness_discount=0.5,
+)
+
+
+def sim_spec(fault=FAULTED, **over) -> ExperimentSpec:
+    base = dict(
+        task=TaskSpec(
+            name="logreg",
+            kwargs={"dim": 6, "n_classes": 3},
+            dataset="synthetic_classification",
+            dataset_kwargs={
+                "n_clients": 12, "total": 600, "dim": 6, "n_classes": 3,
+                "seed": 0,
+            },
+        ),
+        sampler=SamplerSpec(name="kvib", kwargs={"horizon": 6}),
+        federation=FederationSpec(
+            rounds=6, budget=4, local_steps=1, batch_size=8, local_lr=0.05
+        ),
+        execution=ExecutionSpec(seed=3),
+        fault=fault,
+    )
+    base.update(over)
+    return ExperimentSpec(**base)
+
+
+def zoo_spec(fault=FAULTED, **exec_over) -> ExperimentSpec:
+    exec_kw = dict(seed=5, compiled=True)
+    exec_kw.update(exec_over)
+    return ExperimentSpec(
+        task=TaskSpec(
+            kind="zoo",
+            name="smollm-360m",
+            reduced=True,
+            kwargs={"n_layers": 2, "d_model": 64, "d_ff": 128, "vocab": 128},
+            dataset="synthetic_tokens",
+            dataset_kwargs={"n_clients": 8, "seq_len": 16, "total_seqs": 256},
+        ),
+        sampler=SamplerSpec(name="kvib", kwargs={"horizon": 4}),
+        federation=FederationSpec(
+            rounds=4, budget=2, cohort=3, local_steps=2, batch_size=2,
+            local_lr=0.05,
+        ),
+        execution=ExecutionSpec(**exec_kw),
+        fault=fault,
+    )
+
+
+def _assert_trees_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec serialization, validation, fingerprint
+# ---------------------------------------------------------------------------
+
+
+def test_fault_spec_json_roundtrip_identity():
+    spec = sim_spec()
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    assert ExperimentSpec.from_json(spec.to_json()).to_json() == spec.to_json()
+    assert spec.to_dict()["fault"]["availability"] == "markov"
+
+
+def test_fault_spec_unknown_key_rejected():
+    d = sim_spec(fault=FaultSpec()).to_dict()
+    d["fault"]["dedaline"] = 1.0  # typo'd field
+    with pytest.raises((ValueError, TypeError), match="dedaline"):
+        ExperimentSpec.from_dict(d)
+
+
+def test_fault_spec_back_compat_four_section_load():
+    """Pre-fault spec JSON (no "fault" section) still loads, to the same
+    spec as an explicitly-disabled FaultSpec."""
+    d = sim_spec(fault=FaultSpec()).to_dict()
+    del d["fault"]
+    assert ExperimentSpec.from_dict(d) == sim_spec(fault=FaultSpec())
+
+
+def test_fault_spec_changes_fingerprint():
+    base = config_fingerprint(sim_spec(fault=FaultSpec()).to_dict())
+    prints = {base}
+    for fault in (
+        FaultSpec(availability="bernoulli", availability_kwargs={"q": 0.5}),
+        FaultSpec(deadline=1.0, latency_kwargs={"scale": 0.5}),
+        FaultSpec(async_buffer=2),
+        FAULTED,
+    ):
+        fp = config_fingerprint(sim_spec(fault=fault).to_dict())
+        assert fp not in prints, f"fingerprint collision for {fault}"
+        prints.add(fp)
+
+
+@pytest.mark.parametrize(
+    "bad,match",
+    [
+        (dict(availability="sometimes"), "availability"),
+        (dict(availability="bernoulli", availability_kwargs={"q": 1.5}), "q"),
+        (dict(availability="bernoulli", availability_kwargs={"q": (0.0, 0.0)}),
+         "all-zero"),
+        (dict(availability="markov", availability_kwargs={"p_on": 0.0}), "p_on"),
+        (dict(availability="diurnal", availability_kwargs={"duty": 0.0}), "duty"),
+        (dict(availability_kwargs={"q": 0.5}), "null"),
+        (dict(latency="pareto"), "latency"),
+        (dict(deadline=-1.0), "deadline"),
+        (dict(deadline=1e-6, latency_kwargs={"scale": 1e6}), "survival"),
+        (dict(async_buffer=-1), "async_buffer"),
+        (dict(staleness_discount=0.0), "staleness_discount"),
+        (dict(round_time=0.0), "round_time"),
+    ],
+)
+def test_fault_spec_rejects_bad_values(bad, match):
+    with pytest.raises(ValueError, match=match):
+        FaultSpec(**bad)
+
+
+def test_disabled_fault_spec_is_inert():
+    """enabled=False projects faults=None into BOTH legacy configs — the
+    build-time switch that keeps the unfaulted program the pre-fault one."""
+    assert not FaultSpec().enabled
+    assert not FaultSpec(round_time=2.0).enabled  # no axis on
+    assert FAULTED.enabled
+    spec = sim_spec(fault=FaultSpec())
+    assert spec.fed_config().faults is None
+    assert zoo_spec(fault=FaultSpec()).round_spec().faults is None
+    assert sim_spec().fed_config().faults is FAULTED
+    assert zoo_spec().round_spec().faults is FAULTED
+
+
+def test_monolithic_fed_scan_rejects_faults():
+    """build_fed_scan (monolithic, no carried fault state) refuses a faulted
+    RoundSpec instead of silently running unfaulted."""
+    import dataclasses as dc
+
+    from repro.fed.round import RoundSpec, build_fed_scan
+    from repro.configs import get_config
+
+    cfg = get_config("smollm-360m").reduced(
+        n_layers=2, d_model=64, d_ff=128, vocab=128
+    )
+    from repro.data import synthetic_tokens
+
+    ds = synthetic_tokens(n_clients=8, seq_len=16, vocab=cfg.vocab,
+                          total_seqs=256, seed=0)
+    s = samplers.make_sampler("kvib", n=8, budget=2, horizon=3)
+    rspec = RoundSpec(cohort=3, local_steps=1, local_lr=0.05, local_batch=2,
+                      faults=FAULTED)
+    with pytest.raises(ValueError, match="fault"):
+        build_fed_scan(cfg, rspec, s, ds)
+    # unfaulted RoundSpec still builds
+    build_fed_scan(cfg, dc.replace(rspec, faults=None), s, ds)
+
+
+# ---------------------------------------------------------------------------
+# Unbiasedness: every registry sampler, availability x deadline
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", samplers.sampler_names())
+def test_availability_deadline_unbiased_registry_sweep(name):
+    """E[d^t] == sum_i lambda_i g_i under Bernoulli availability (composed
+    q*p correction) AND deadline dropout (1/survival reweighting), for every
+    registered sampler — the fault layer's core estimator contract."""
+    n, k, d = 16, 5, 8
+    g = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    lam = jax.random.dirichlet(jax.random.PRNGKey(1), jnp.ones(n))
+    q = jax.random.uniform(jax.random.PRNGKey(2), (n,), minval=0.5, maxval=1.0)
+    fault = FaultSpec(
+        deadline=1.0, latency="exponential", latency_kwargs={"scale": 0.4}
+    )
+    surv = stragglers.deadline_survival(fault)
+    target = np.asarray(estimator.full_aggregate_stacked(g, lam))
+
+    s = samplers.make_sampler(name, n=n, budget=k)
+    st = s.init()
+    fb = lam * jnp.linalg.norm(g, axis=1)
+    # optimal_isp is the oracle diagnostic: by contract it stores the
+    # *current full* feedback (masked feedback would water-fill unobserved
+    # clients to ~zero probability)
+    oracle = name == "optimal_isp"
+    for t in range(3):  # burn-in so adaptive states are non-trivial
+        dr = s.sample(st, jax.random.PRNGKey(10 + t))
+        st = s.update(st, dr, fb if oracle else fb * dr.mask)
+
+    trials = 4000
+    keys = jax.random.split(jax.random.PRNGKey(5), trials)
+
+    def one(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        dr = s.sample(st, k1)
+        avail = jax.random.uniform(k2, (n,)) < q
+        dr = stragglers.available_draw(dr, avail, q)
+        w = estimator.client_weights(dr, lam, s.procedure, s.budget)
+        lat = stragglers.latency_draw(fault, (n,), k3)
+        late = jnp.logical_and(dr.mask, lat > fault.deadline)
+        w = jnp.where(late, 0.0, w / jnp.float32(surv))
+        return estimator.aggregate_stacked(g, w)
+
+    ests = jax.vmap(one)(keys)
+    mean = np.asarray(jnp.mean(ests, axis=0))
+    se = np.asarray(jnp.std(ests, axis=0)) / np.sqrt(trials)
+    assert np.all(np.abs(mean - target) < 6.0 * se + 5e-4), name
+
+
+def test_markov_availability_conditionally_unbiased():
+    """Given a carried chain state, availability_step's returned q IS the
+    conditional availability probability, so the composed correction is
+    unbiased round by round (tower property gives the unconditional case)."""
+    n, k, d = 16, 5, 8
+    g = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    lam = jax.random.dirichlet(jax.random.PRNGKey(1), jnp.ones(n))
+    target = np.asarray(estimator.full_aggregate_stacked(g, lam))
+    fault = FaultSpec(
+        availability="markov", availability_kwargs={"p_on": 0.6, "p_off": 0.3}
+    )
+    chain = jnp.arange(n) % 2 == 0  # mixed carried on/off state
+
+    s = samplers.make_sampler("kvib", n=n, budget=k, gamma=0.05)
+    st = s.init()
+
+    trials = 4000
+    keys = jax.random.split(jax.random.PRNGKey(7), trials)
+
+    def one(key):
+        k1, k2 = jax.random.split(key)
+        dr = s.sample(st, k1)
+        mask, q_t, new_chain = stragglers.availability_step(
+            fault, chain, jnp.int32(5), k2, n
+        )
+        cdr = stragglers.available_draw(dr, mask, q_t)
+        w = estimator.client_weights(cdr, lam, s.procedure, s.budget)
+        return estimator.aggregate_stacked(g, w), new_chain
+
+    ests, chains = jax.vmap(one)(keys)
+    mean = np.asarray(jnp.mean(ests, axis=0))
+    se = np.asarray(jnp.std(ests, axis=0)) / np.sqrt(trials)
+    assert np.all(np.abs(mean - target) < 6.0 * se + 5e-4)
+
+    # the advanced chain realizes the transition kernel: on->on w.p. 1-p_off,
+    # off->on w.p. p_on
+    on_rate = np.asarray(jnp.mean(chains.astype(jnp.float32), axis=0))
+    was_on = np.asarray(chain)
+    assert np.allclose(on_rate[was_on], 0.7, atol=0.03)
+    assert np.allclose(on_rate[~was_on], 0.6, atol=0.03)
+
+
+def test_markov_chain_starts_all_on():
+    assert bool(jnp.all(stragglers.availability_init(FAULTED, 9)))
+    assert stragglers.availability_init(
+        FaultSpec(availability="bernoulli"), 9
+    ) is None
+
+
+def test_diurnal_schedule_is_deterministic_and_excluding():
+    """Diurnal q is exactly the 0/1 mask (offline clients excluded, never
+    importance-corrected) and the schedule is key-independent."""
+    fault = FaultSpec(
+        availability="diurnal",
+        availability_kwargs={"period": 8.0, "duty": 0.5},
+    )
+    n = 12
+    m1, q1, _ = stragglers.availability_step(
+        fault, None, jnp.int32(3), jax.random.PRNGKey(0), n
+    )
+    m2, q2, _ = stragglers.availability_step(
+        fault, None, jnp.int32(3), jax.random.PRNGKey(99), n
+    )
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(m1, np.float32))
+    assert 0 < int(m1.sum()) < n  # the duty cycle actually splits the fleet
+
+    s = samplers.make_sampler("uniform_isp", n=n, budget=4)
+    dr = stragglers.available_draw(s.sample(s.init(), jax.random.PRNGKey(1)), m1, q1)
+    w = estimator.client_weights(dr, jnp.ones(n) / n, s.procedure, s.budget)
+    assert np.all(np.asarray(w)[~np.asarray(m1)] == 0.0)
+    assert np.all(np.isfinite(np.asarray(w)))
+
+
+# ---------------------------------------------------------------------------
+# Buffered-async ring buffer: deterministic unit semantics
+# ---------------------------------------------------------------------------
+
+
+def test_async_step_constant_delay_matches_hand_rolled():
+    """Constant latency 1.2 with round_time 1.0 -> every delta arrives one
+    round late and is applied with discount rho^1; the horizon-end flush
+    drains exactly the last pending delta."""
+    b, dim, rho = 3, 4, 0.5
+    fault = FaultSpec(
+        async_buffer=b, staleness_discount=rho, round_time=1.0,
+        latency="uniform", latency_kwargs={"lo": 1.2, "hi": 1.2},
+    )
+    buf = stragglers.fault_state_init(fault, n=8, d_dim=dim)["buf"]
+    us = [jnp.full((dim,), float(t + 1), jnp.float32) for t in range(4)]
+    applied = []
+    for t in range(4):
+        buf, apply_vec, n_arr = stragglers.async_step(
+            fault, buf, us[t], jnp.int32(t), jax.random.PRNGKey(t)
+        )
+        applied.append(np.asarray(apply_vec))
+        assert int(n_arr) == (0 if t == 0 else 1)
+    # round 0 applies nothing; round t applies rho * u_{t-1}
+    np.testing.assert_array_equal(applied[0], np.zeros(dim, np.float32))
+    for t in range(1, 4):
+        np.testing.assert_allclose(applied[t], rho * np.asarray(us[t - 1]))
+    # only u_3 is still pending; flushed at t_end=4 with discount rho^1
+    assert np.asarray(buf["valid"]).sum() == 1
+    flushed = np.asarray(stragglers.flush_pending(buf, 4, rho))
+    np.testing.assert_allclose(flushed, rho * np.asarray(us[3]))
+
+
+def test_async_zero_delay_degenerates_to_synchronous():
+    """latency < round_time -> delay 0: push-then-pop the same round, apply
+    the delta undiscounted (rho^0), nothing ever left pending."""
+    fault = FaultSpec(
+        async_buffer=3, staleness_discount=0.25, round_time=1.0,
+        latency="uniform", latency_kwargs={"lo": 0.0, "hi": 0.5},
+    )
+    buf = stragglers.fault_state_init(fault, n=8, d_dim=5)["buf"]
+    for t in range(5):
+        u = jnp.arange(5, dtype=jnp.float32) * (t + 1)
+        buf, apply_vec, n_arr = stragglers.async_step(
+            fault, buf, u, jnp.int32(t), jax.random.PRNGKey(100 + t)
+        )
+        np.testing.assert_array_equal(np.asarray(apply_vec), np.asarray(u))
+        assert int(n_arr) == 1
+        assert not np.asarray(buf["valid"]).any()
+
+
+def test_async_delay_clipped_to_buffer_never_overwrites_pending():
+    """Latency far beyond B * round_time clips to delay B-1, so a slot is
+    always drained before the ring reuses it — no pending delta is lost:
+    total applied + flushed mass equals total dispatched mass."""
+    b = 3
+    fault = FaultSpec(
+        async_buffer=b, staleness_discount=1.0, round_time=1.0,
+        latency="uniform", latency_kwargs={"lo": 100.0, "hi": 100.0},
+    )
+    dim, rounds = 2, 7
+    buf = stragglers.fault_state_init(fault, n=4, d_dim=dim)["buf"]
+    total_applied = np.zeros(dim, np.float32)
+    for t in range(rounds):
+        u = jnp.full((dim,), 1.0, jnp.float32)
+        buf, apply_vec, _ = stragglers.async_step(
+            fault, buf, u, jnp.int32(t), jax.random.PRNGKey(t)
+        )
+        total_applied += np.asarray(apply_vec)
+    total_applied += np.asarray(stragglers.flush_pending(buf, rounds, 1.0))
+    np.testing.assert_allclose(total_applied, np.full(dim, float(rounds)))
+
+
+def test_tree_vec_roundtrip():
+    like = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": jnp.asarray(2.5, jnp.float32),
+    }
+    assert stragglers.flat_dim(like) == 7
+    vec = stragglers.tree_to_vec(like)
+    assert vec.shape == (7,)
+    back = stragglers.vec_to_tree(vec, like)
+    _assert_trees_equal(back, like)
+
+
+# ---------------------------------------------------------------------------
+# Execution guarantees: bitwise across compiled/reference, segmentation,
+# resume, and sharding
+# ---------------------------------------------------------------------------
+
+
+def test_faulted_sim_compiled_matches_reference_bitwise():
+    spec_c = sim_spec(execution=ExecutionSpec(seed=3, compiled=True))
+    spec_r = sim_spec(execution=ExecutionSpec(seed=3, compiled=False))
+    h_c = api.run(spec_c)
+    h_r = api.run(spec_r)
+    assert h_c.train_loss == h_r.train_loss
+    assert h_c.deadline_dropped == h_r.deadline_dropped
+    _assert_trees_equal(h_c.final_params, h_r.final_params)
+    assert all(np.isfinite(h_c.train_loss))
+
+
+def test_faulted_history_reports_deadline_drops():
+    """A tight deadline (survival ~10%) must surface nonzero per-round drop
+    counts while the reweighted run stays finite."""
+    fault = FaultSpec(
+        deadline=0.05, latency="exponential", latency_kwargs={"scale": 0.5}
+    )
+    h = api.run(sim_spec(fault=fault))
+    assert len(h.deadline_dropped) == 6
+    assert sum(h.deadline_dropped) > 0
+    assert all(np.isfinite(h.train_loss))
+
+
+def test_unfaulted_history_has_no_deadline_channel():
+    h = api.run(sim_spec(fault=FaultSpec()))
+    assert getattr(h, "deadline_dropped", []) in ([], None)
+
+
+def test_faulted_zoo_segmentation_bitwise():
+    """Segment boundaries are bitwise-neutral under faults: the Markov chain
+    and the (B, D) async buffer live in the TrainState carry, and the async
+    flush happens only once at the horizon."""
+    h_mono = api.run(zoo_spec(ckpt_every=0))
+    h_seg1 = api.run(zoo_spec(ckpt_every=1))
+    h_seg3 = api.run(zoo_spec(ckpt_every=3))
+    for h in (h_seg1, h_seg3):
+        assert h.train_loss == h_mono.train_loss
+        assert h.deadline_dropped == h_mono.deadline_dropped
+        _assert_trees_equal(h.final_params, h_mono.final_params)
+    assert all(np.isfinite(h_mono.train_loss))
+
+
+def test_faulted_zoo_resume_bitwise(tmp_path):
+    """A faulted run preempted after one segment resumes from checkpoint and
+    finishes bit-for-bit with the uninterrupted run — all fault state
+    (availability chain, stale-delta buffer) rides the checkpoint."""
+    from repro.api.runner import _zoo_segment_and_state
+    from repro.fed.state import run_segmented
+
+    spec = zoo_spec(ckpt_every=1)
+    h_full = api.run(spec)
+
+    def manager():
+        return CheckpointManager(
+            str(tmp_path / "ck"), fingerprint=config_fingerprint(spec.to_dict())
+        )
+
+    segment, state = _zoo_segment_and_state(api.build(spec))
+    run_segmented(state, 4, segment, ckpt_every=1, manager=manager(),
+                  max_segments=2)
+
+    h_resumed = api.run(spec, ckpt_manager=manager())
+    assert h_resumed.train_loss == h_full.train_loss
+    assert h_resumed.deadline_dropped == h_full.deadline_dropped
+    _assert_trees_equal(h_resumed.final_params, h_full.final_params)
+
+
+def test_faulted_sim_resume_bitwise(tmp_path):
+    """Same resume guarantee on the simulation stack (deployable compiled)."""
+    from repro.fed.server import build_segment_runner
+    from repro.fed.state import run_segmented
+
+    spec = sim_spec(execution=ExecutionSpec(seed=3, ckpt_every=2))
+    h_full = api.run(spec)
+
+    def manager():
+        return CheckpointManager(
+            str(tmp_path / "ck"), fingerprint=config_fingerprint(spec.to_dict())
+        )
+
+    built = api.build(spec)
+    seg, st = build_segment_runner(
+        built.task, built.dataset, built.sampler, built.fed_config
+    )
+    st = run_segmented(st, 6, seg, ckpt_every=2, manager=manager(),
+                       max_segments=1)
+    assert int(st.round) == 2
+
+    h_resumed = api.run(spec, ckpt_manager=manager())
+    assert h_resumed.train_loss == h_full.train_loss
+    assert h_resumed.deadline_dropped == h_full.deadline_dropped
+    _assert_trees_equal(h_resumed.final_params, h_full.final_params)
+
+
+def test_faulted_sharded_s1_bitwise():
+    """sampler_axis on a 1-device mesh (S=1) is bitwise identical to the
+    unsharded faulted run — the availability state's shard constraints are
+    layout-only."""
+    fault = FaultSpec(
+        availability="bernoulli", availability_kwargs={"q": 0.6},
+        deadline=1.0, latency_kwargs={"scale": 0.5},
+    )
+    h_plain = api.run(sim_spec(fault=fault))
+    h_shard = api.run(
+        sim_spec(fault=fault, execution=ExecutionSpec(seed=3, sampler_axis="data"))
+    )
+    assert h_plain.train_loss == h_shard.train_loss
+    assert h_plain.deadline_dropped == h_shard.deadline_dropped
+    _assert_trees_equal(h_plain.final_params, h_shard.final_params)
+
+
+@pytest.mark.slow  # fresh interpreter: forced 2-device CPU mesh
+def test_faulted_two_device_sharded_within_eps_subprocess():
+    """Satellite: a 2-device sampler-axis-sharded run under Bernoulli
+    availability + deadline matches the unsharded faulted run within psum
+    reassociation eps."""
+    spec_json = sim_spec(
+        fault=FaultSpec(
+            availability="bernoulli", availability_kwargs={"q": 0.6},
+            deadline=1.0, latency_kwargs={"scale": 0.5},
+        ),
+        execution=ExecutionSpec(seed=3, sampler_axis="data"),
+    ).to_json()
+    script = textwrap.dedent(
+        f"""
+        import numpy as np, jax
+        from repro.api import ExperimentSpec, build, run
+
+        assert len(jax.devices()) == 2
+        spec = ExperimentSpec.from_json({spec_json!r})
+        built = build(spec)
+        assert built.sampler.shard.num_shards == 2
+        h = run(spec, built=built)
+        plain = ExperimentSpec.from_dict(
+            {{**spec.to_dict(),
+              "execution": {{**spec.to_dict()["execution"],
+                             "sampler_axis": None}}}}
+        )
+        ref = run(plain)
+        assert all(np.isfinite(h.train_loss))
+        np.testing.assert_allclose(
+            h.train_loss, ref.train_loss, rtol=1e-3, atol=1e-4
+        )
+        print("FAULT_SHARD_OK")
+        """
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, timeout=600,
+        env=dict(SUBPROC_ENV, REPRO_MESH_SHAPE="2,1"),
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "FAULT_SHARD_OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# CLI + lint integration
+# ---------------------------------------------------------------------------
+
+
+def test_cli_faults_flag_projects_onto_spec():
+    from repro.launch.train import build_spec_from_args, make_parser
+
+    fault_json = json.dumps(
+        {"availability": "markov",
+         "availability_kwargs": {"p_on": 0.7, "p_off": 0.2},
+         "deadline": 1.0, "latency_kwargs": {"scale": 0.5},
+         "async_buffer": 3}
+    )
+    args = make_parser().parse_args(
+        ["--sampler", "kvib", "--rounds", "4", "--compiled",
+         "--faults", fault_json]
+    )
+    spec = build_spec_from_args(args)
+    assert spec.fault == FaultSpec(
+        availability="markov",
+        availability_kwargs={"p_on": 0.7, "p_off": 0.2},
+        deadline=1.0, latency_kwargs={"scale": 0.5}, async_buffer=3,
+    )
+    assert spec.fault.enabled
+
+    assert build_spec_from_args(
+        make_parser().parse_args(["--sampler", "kvib"])
+    ).fault == FaultSpec()
+
+
+def test_lint_faulted_cell_clean_fast():
+    """The faulted round bodies trace clean through the static auditors
+    (fast sweep, one adaptive sampler)."""
+    from repro.analysis.lint import sweep_registry
+
+    report = sweep_registry(samplers=["kvib"], fast=True)
+    assert report.ok, report.render()
+    faulted = [c for c in report.checked if "faulted" in c]
+    assert faulted, report.checked

@@ -2,9 +2,14 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import estimator, samplers
-from repro.core.stragglers import availability_weights, available_draw
+from repro.core.stragglers import (
+    ZeroAvailabilityError,
+    availability_weights,
+    available_draw,
+)
 
 
 def test_unbiased_under_stragglers():
@@ -47,3 +52,74 @@ def test_unavailable_clients_never_included():
     for t in range(30):
         dr = available_draw(s.sample(st, jax.random.PRNGKey(t)), avail)
         assert not bool(jnp.any(jnp.logical_and(dr.mask, ~avail)))
+
+
+def test_composed_draw_contract():
+    # available_draw(dr, avail, q) composes q into the draw probabilities, so
+    # the plain estimator on the composed draw IS the availability-corrected
+    # estimator on the masked draw.
+    n, k = 20, 7
+    lam = jax.random.dirichlet(jax.random.PRNGKey(1), jnp.ones(n))
+    q = jax.random.uniform(jax.random.PRNGKey(2), (n,), minval=0.3, maxval=1.0)
+    s = samplers.make_sampler("kvib", n=n, budget=k, gamma=0.05)
+    st = s.init()
+    dr = s.sample(st, jax.random.PRNGKey(3))
+    avail = jax.random.uniform(jax.random.PRNGKey(4), (n,)) < q
+
+    composed = available_draw(dr, avail, q)
+    np.testing.assert_allclose(
+        np.asarray(composed.marginals), np.asarray(q * dr.marginals), rtol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(composed.draw_probs), np.asarray(q * dr.draw_probs), rtol=1e-6
+    )
+    assert not bool(jnp.any(jnp.logical_and(composed.mask, ~avail)))
+
+    masked = available_draw(dr, avail)
+    w_legacy = availability_weights(masked, lam, q, s.procedure, s.budget)
+    w_composed = estimator.client_weights(composed, lam, s.procedure, s.budget)
+    np.testing.assert_allclose(
+        np.asarray(w_composed), np.asarray(w_legacy), rtol=1e-5, atol=1e-7
+    )
+
+
+def test_composed_draw_zero_q_excluded():
+    # q == 0 clients are excluded from the mask even if the raw availability
+    # bit is (incorrectly) on for them.
+    n, k = 12, 5
+    s = samplers.make_sampler("uniform_isp", n=n, budget=k)
+    q = jnp.where(jnp.arange(n) < 4, 0.0, 1.0)
+    avail = jnp.ones((n,), dtype=bool)  # claims everyone is up
+    for t in range(20):
+        dr = available_draw(s.sample(s.init(), jax.random.PRNGKey(t)), avail, q)
+        assert not bool(jnp.any(jnp.logical_and(dr.mask, q == 0.0)))
+
+
+def test_zero_availability_raises_on_host():
+    # Host path: a drawn client with q == 0 is a configuration error and must
+    # raise a named exception instead of silently clamping to 1e-30.
+    n, k = 10, 4
+    lam = jnp.ones(n) / n
+    s = samplers.make_sampler("uniform_isp", n=n, budget=k)
+    dr = s.sample(s.init(), jax.random.PRNGKey(0))
+    q = jnp.zeros(n)  # every client has zero availability
+    with pytest.raises(ZeroAvailabilityError):
+        availability_weights(dr, lam, q, s.procedure, s.budget)
+
+
+def test_zero_availability_masks_to_zero_in_trace():
+    # In-trace the same condition cannot raise; the weight must be exactly
+    # 0.0 (masked out), never a huge 1/1e-30 blow-up.
+    n, k = 10, 4
+    lam = jnp.ones(n) / n
+    s = samplers.make_sampler("uniform_isp", n=n, budget=k)
+    dr = s.sample(s.init(), jax.random.PRNGKey(0))
+    q = jnp.where(jnp.arange(n) < n // 2, 0.0, 1.0)
+
+    @jax.jit
+    def weights(q_):
+        return availability_weights(dr, lam, q_, s.procedure, s.budget)
+
+    w = np.asarray(weights(q))
+    assert np.all(w[: n // 2] == 0.0)
+    assert np.all(np.isfinite(w))
