@@ -584,6 +584,160 @@ def bench_fed_fault_overhead() -> None:
 
 
 # ---------------------------------------------------------------------------
+# Table: compressed client deltas — delta width on the zoo LM round
+# ---------------------------------------------------------------------------
+
+
+def bench_fed_lm_delta_width() -> None:
+    """The delta-width win: int8 client deltas vs f32 on the zoo LM round.
+
+    Three costs, one spec pair (identical except ``compression``):
+
+    * **aggregation buffer bytes** — the HBM-resident stacked cohort buffer
+      the aggregate consumes, from aval sizes (``jax.eval_shape`` over
+      ``quantize_stacked``): (C, D_pad) int8 + (C, nb) f32 scales vs (C, D)
+      f32.  Target: >= 3.5x smaller.
+    * **us/round** — the compiled segmented scan, interleaved best-of-k (the
+      quantize/dequant work must not eat the bandwidth win).
+    * **checkpoint bytes** — with the buffered-async ring on, the carried
+      (B, D) stale-delta buffer is quantized too, so the on-disk
+      ``TrainState`` shrinks; measured from a real ``CheckpointManager``
+      step directory.
+
+    Emits ``RESULTS/BENCH_fed_lm_delta_width.json`` with lower-is-better
+    int8/f32 ratios for the regression gate.
+    """
+    import tempfile
+
+    from repro import api
+    from repro.checkpoint import CheckpointManager
+    from repro.fed.round import build_fed_scan_segment
+    from repro.fed.state import run_segmented
+    from repro.kernels.fused_weighted_agg import quantize_stacked
+    from repro.models import transformer
+
+    rounds, n, c = 6, 24, 6
+    ring_fault = api.FaultSpec(
+        async_buffer=4, staleness_discount=0.5,
+        latency="exponential", latency_kwargs={"scale": 2.0},
+    )
+
+    def spec_with(compression):
+        return api.ExperimentSpec(
+            task=api.TaskSpec(
+                kind="zoo", name="smollm-360m", reduced=True,
+                kwargs=dict(
+                    n_layers=2, d_model=128, d_ff=256, vocab=256,
+                    round_mode="client_parallel",
+                ),
+                dataset="synthetic_tokens",
+                dataset_kwargs=dict(
+                    n_clients=n, seq_len=32, vocab=256, total_seqs=40 * n,
+                    seed=0,
+                ),
+            ),
+            sampler=api.SamplerSpec(name="kvib", kwargs=dict(horizon=rounds)),
+            federation=api.FederationSpec(
+                rounds=rounds, budget=c, cohort=c, local_steps=1, batch_size=8,
+            ),
+            execution=api.ExecutionSpec(seed=0, ckpt_every=rounds // 2),
+            fault=ring_fault,
+            compression=compression,
+        )
+
+    modes = {
+        "f32": api.CompressionSpec(),
+        "int8": api.CompressionSpec(delta_dtype="int8"),
+    }
+    entry: dict = {"n": n, "cohort": c, "rounds": rounds}
+    goes = {}
+    for mode, comp in modes.items():
+        spec = spec_with(comp)
+        built = api.build(spec)
+        key = jax.random.PRNGKey(spec.execution.seed)
+        params = transformer.init_params(built.arch_config, key)
+        d_dim = sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+        # aggregation buffer bytes, straight from aval sizes
+        if not comp.enabled:
+            agg_bytes = c * d_dim * 4
+        else:
+            q_aval, s_aval = jax.eval_shape(
+                lambda f: quantize_stacked(
+                    f, dtype=comp.delta_dtype, scale_block=comp.scale_block
+                ),
+                jax.ShapeDtypeStruct((c, d_dim), jnp.float32),
+            )
+            agg_bytes = (
+                q_aval.size * q_aval.dtype.itemsize
+                + s_aval.size * s_aval.dtype.itemsize
+            )
+        entry[f"{mode}_agg_buffer_bytes"] = int(agg_bytes)
+        # donate=False: the interleaved re-runs reuse the round-0 state
+        segment, make_state = build_fed_scan_segment(
+            built.arch_config, built.round_spec, built.sampler, built.dataset,
+            donate=False,
+        )
+        state0 = make_state(params, built.sampler.init(), key, rounds)
+
+        def go(segment=segment, state0=state0):
+            jax.block_until_ready(run_segmented(state0, rounds, segment))
+
+        goes[mode] = go
+        go()  # compile up front
+        # checkpoint bytes: a real manager step dir, async ring included
+        with tempfile.TemporaryDirectory() as tmp:
+            mgr = CheckpointManager(os.path.join(tmp, "ck"), keep_last=1)
+            run_segmented(
+                state0, rounds, segment,
+                ckpt_every=spec.execution.ckpt_every, manager=mgr,
+            )
+            ck_bytes = sum(
+                os.path.getsize(os.path.join(root, f))
+                for root, _, files in os.walk(tmp)
+                for f in files
+            )
+        entry[f"{mode}_ckpt_bytes"] = int(ck_bytes)
+    best = {mode: float("inf") for mode in goes}
+    for _ in range(6):
+        for mode, go in goes.items():
+            t0 = time.perf_counter()
+            go()
+            best[mode] = min(best[mode], time.perf_counter() - t0)
+    for mode in goes:
+        entry[f"{mode}_us_per_round"] = best[mode] / rounds * 1e6
+        row(
+            f"fed_lm_delta_width_{mode}", entry[f"{mode}_us_per_round"],
+            f"us/round, agg buffer {entry[f'{mode}_agg_buffer_bytes']} B, "
+            f"ckpt {entry[f'{mode}_ckpt_bytes']} B",
+        )
+    ratios = {
+        "int8_over_f32_agg_buffer_bytes": entry["int8_agg_buffer_bytes"]
+        / entry["f32_agg_buffer_bytes"],
+        "int8_over_f32_ckpt_bytes": entry["int8_ckpt_bytes"]
+        / entry["f32_ckpt_bytes"],
+        "int8_over_f32_us_per_round": entry["int8_us_per_round"]
+        / entry["f32_us_per_round"],
+    }
+    row(
+        "fed_lm_delta_width", 0,
+        f"agg bytes {1 / ratios['int8_over_f32_agg_buffer_bytes']:.2f}x smaller "
+        f"(target >= 3.5x), ckpt {1 / ratios['int8_over_f32_ckpt_bytes']:.2f}x, "
+        f"time ratio {ratios['int8_over_f32_us_per_round']:.3f}x",
+    )
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "BENCH_fed_lm_delta_width.json"), "w") as f:
+        json.dump(
+            {
+                "bench": "fed_lm_delta_width",
+                "entries": [entry],
+                # regression-gate ratios: LOWER is better
+                "ratios": ratios,
+            },
+            f, indent=2,
+        )
+
+
+# ---------------------------------------------------------------------------
 # Paper figures from experiment artifacts
 # ---------------------------------------------------------------------------
 
@@ -680,6 +834,7 @@ BENCHES = {
     "fed_cohort_width": bench_fed_cohort_width,
     "fed_sampler_scale": bench_fed_sampler_scale,
     "fed_fault_overhead": bench_fed_fault_overhead,
+    "fed_lm_delta_width": bench_fed_lm_delta_width,
     "fig2": table_synthetic,
     "fig3b": table_budget,
     "fig4": table_femnist,

@@ -3,16 +3,19 @@ samplers — the Section 6.3 experiment at CPU-simulation scale.
 
 Clients hold heterogeneous token streams (heavy long-tail sizes, distinct
 unigram styles); the model is a causal transformer LM.  With --model zoo the
-driver trains a reduced smollm-360m from the architecture zoo through the
-same federated stack (the end-to-end path used by launch/train.py).
+driver fans each sampler out over reduced architecture-zoo configs — dense
+(smollm), MoE (qwen3), mamba2 hybrid (zamba2), and xLSTM — through the same
+federated stack (the end-to-end path used by launch/train.py); --archs
+narrows the sweep.
 
     PYTHONPATH=src python examples/fed_lm.py [--out results/fed_lm.json]
 
 Both model choices are spec-driven: the tiny LM is the built-in ``tiny_lm``
-task, and the zoo-backed variant registers a custom Task factory
-(``api.register_task``) so it too is just a name in the spec.
+task, and the zoo-backed variants register a custom Task factory
+(``api.register_task``) so they too are just names in the spec.
 """
 import argparse
+import itertools
 import json
 import os
 
@@ -20,12 +23,33 @@ from repro import api
 from repro.fed.tasks import Task
 
 
-def zoo_lm_task(vocab: int):
-    """A reduced smollm-360m from the zoo wrapped as a federated Task."""
+# --model zoo covers one reduced config per architecture family: a dense
+# transformer (smollm), a top-k routed MoE (qwen3), a mamba2/attention
+# hybrid (zamba2), and an mLSTM/sLSTM stack (xlstm).  All four flow through
+# transformer.init_params/loss_fn, so the federated stack sees them as
+# ordinary Tasks.  zamba2's 19-block pattern is shortened so the reduced
+# depth stays CPU-sized (the pattern length must divide n_layers).
+ZOO_ARCHS = {
+    "smollm": ("smollm-360m", dict(n_layers=4, d_model=192, d_ff=512)),
+    "moe": ("qwen3-moe-235b-a22b", {}),
+    "ssm": (
+        "zamba2-1.2b",
+        dict(
+            n_layers=4,
+            block_pattern=("mamba2", "mamba2", "mamba2", "shared_attn"),
+        ),
+    ),
+    "xlstm": ("xlstm-125m", {}),
+}
+
+
+def zoo_lm_task(vocab: int, arch: str = "smollm"):
+    """A reduced zoo architecture wrapped as a federated Task."""
     from repro.configs import get_config
     from repro.models import transformer
 
-    cfg = get_config("smollm-360m").reduced(vocab=vocab, n_layers=4, d_model=192, d_ff=512)
+    name, overrides = ZOO_ARCHS[arch]
+    cfg = get_config(name).reduced(vocab=vocab, **overrides)
 
     def init(key):
         return transformer.init_params(cfg, key)
@@ -39,10 +63,12 @@ def zoo_lm_task(vocab: int):
         logits, _ = transformer.forward(params, cfg, batch[0])
         return jnp.mean((jnp.argmax(logits, -1) == batch[1]).astype(jnp.float32))
 
-    return Task("smollm-reduced", init, loss, accuracy)
+    return Task(cfg.name, init, loss, accuracy)
 
 
-api.register_task("smollm_reduced_lm", zoo_lm_task)
+api.register_task("zoo_reduced_lm", zoo_lm_task)
+# Back-compat alias: older result JSONs reference the smollm-only task name.
+api.register_task("smollm_reduced_lm", lambda vocab: zoo_lm_task(vocab, "smollm"))
 
 
 def main() -> None:
@@ -53,17 +79,33 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--vocab", type=int, default=256)
     ap.add_argument("--model", choices=["tiny", "zoo"], default="tiny")
+    ap.add_argument(
+        "--archs",
+        nargs="+",
+        default=list(ZOO_ARCHS),
+        choices=list(ZOO_ARCHS),
+        help="zoo architecture families to run (only with --model zoo)",
+    )
     ap.add_argument("--samplers", nargs="+", default=["uniform_isp", "vrb", "avare", "kvib"])
     ap.add_argument("--out", default="results/fed_lm.json")
     args = ap.parse_args()
 
-    task_name = "tiny_lm" if args.model == "tiny" else "smollm_reduced_lm"
+    # tiny runs one model; zoo fans each sampler out over the reduced
+    # architecture families (result keys become "<sampler>/<arch>").
+    variants = (
+        [("tiny_lm", {}, None)]
+        if args.model == "tiny"
+        else [("zoo_reduced_lm", {"arch": a}, a) for a in args.archs]
+    )
     results = {"config": vars(args), "runs": {}}
-    for name in args.samplers:
+    for name, (task_name, task_kwargs, arch) in itertools.product(
+        args.samplers, variants
+    ):
+        run_key = name if arch is None else f"{name}/{arch}"
         spec = api.ExperimentSpec(
             task=api.TaskSpec(
                 name=task_name,
-                kwargs=dict(vocab=args.vocab),
+                kwargs=dict(vocab=args.vocab, **task_kwargs),
                 dataset="synthetic_tokens",
                 dataset_kwargs=dict(
                     n_clients=args.clients, seq_len=args.seq, vocab=args.vocab,
@@ -81,13 +123,13 @@ def main() -> None:
             execution=api.ExecutionSpec(seed=0),
         )
         hist = api.run(spec)
-        results["runs"][name] = {
+        results["runs"][run_key] = {
             "loss": [float(x) for x in hist.train_loss],
             "regret": [float(x) for x in hist.regret.dynamic_regret()],
             "sq_error": [float(x) for x in hist.estimator_sq_error],
         }
         print(
-            f"{name:<12} loss {hist.train_loss[0]:.3f} -> {hist.train_loss[-1]:.3f}  "
+            f"{run_key:<18} loss {hist.train_loss[0]:.3f} -> {hist.train_loss[-1]:.3f}  "
             f"regret/T={hist.regret.dynamic_regret()[-1]/args.rounds:.4f} "
             f"({hist.wall_time_s:.0f}s)"
         )

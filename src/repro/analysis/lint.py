@@ -999,6 +999,7 @@ def sweep_registry(
     the compile-once and HLO passes (pure tracing; seconds instead of
     minutes)."""
     from repro.api import (
+        CompressionSpec,
         ExecutionSpec,
         ExperimentSpec,
         FaultSpec,
@@ -1031,20 +1032,26 @@ def sweep_registry(
             # the fault-injected compiled path: the availability-composed
             # round body with the deadline and async-ring machinery in the
             # carry must satisfy the same width/dtype/scan-safety/compile-
-            # once contracts as the clean body.  Reference x sharded and
-            # reference x faulted add nothing the compiled cells don't trace
-            # (same bodies), so they are not swept.
-            for compiled, axis, faulted in (
-                (True, None, False),
-                (False, None, False),
-                (True, "data", False),
-                (True, None, True),
+            # once contracts as the clean body.  The fifth is the compressed
+            # path: the int8-quantized (C, D) delta buffer, its fp32
+            # per-block scales, and the error-feedback residual in the carry
+            # are all intentional narrow/auxiliary arrays that must pass the
+            # width and dtype auditors without findings.  Reference x
+            # sharded and reference x faulted add nothing the compiled cells
+            # don't trace (same bodies), so they are not swept.
+            for compiled, axis, faulted, compressed in (
+                (True, None, False, False),
+                (False, None, False, False),
+                (True, "data", False, False),
+                (True, None, True, False),
+                (True, None, False, True),
             ):
                 cell = (
                     f"{name} x {'oracle' if oracle else 'deployable'} x "
                     f"{'compiled' if compiled else 'reference'}"
                     + (" x sharded" if axis else "")
                     + (" x faulted" if faulted else "")
+                    + (" x compressed" if compressed else "")
                 )
                 if progress is not None:
                     progress(cell)
@@ -1066,6 +1073,9 @@ def sweep_registry(
                         compiled=compiled, oracle_metrics=oracle, sampler_axis=axis
                     ),
                     fault=faulted_spec if faulted else FaultSpec(),
+                    compression=CompressionSpec(delta_dtype="int8")
+                    if compressed
+                    else CompressionSpec(),
                 )
                 sub = run_suite(
                     spec,

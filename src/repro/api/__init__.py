@@ -32,6 +32,7 @@ def lint(spec, **kwargs):
 
     return run_suite(spec, **kwargs)
 from repro.api.spec import (
+    CompressionSpec,
     ExecutionSpec,
     ExperimentSpec,
     FaultSpec,
@@ -52,6 +53,7 @@ __all__ = [
     "FederationSpec",
     "ExecutionSpec",
     "FaultSpec",
+    "CompressionSpec",
     "BuiltExperiment",
     "build",
     "run",

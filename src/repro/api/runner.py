@@ -197,12 +197,13 @@ def _specs_compatible(a: ExperimentSpec, b: ExperimentSpec) -> bool:
     if fa.cohort is None or fb.cohort is None:
         fa = dataclasses.replace(fa, cohort=None)
         fb = dataclasses.replace(fb, cohort=None)
-    return (a.task, a.sampler, fa, a.execution, a.fault) == (
+    return (a.task, a.sampler, fa, a.execution, a.fault, a.compression) == (
         b.task,
         b.sampler,
         fb,
         b.execution,
         b.fault,
+        b.compression,
     )
 
 

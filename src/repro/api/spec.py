@@ -49,6 +49,7 @@ __all__ = [
     "FederationSpec",
     "ExecutionSpec",
     "FaultSpec",
+    "CompressionSpec",
     "ExperimentSpec",
     "register_task",
     "register_dataset",
@@ -429,6 +430,69 @@ class FaultSpec:
         )
 
 
+_DELTA_DTYPES = (None, "int8", "fp8")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionSpec:
+    """Delta-width axis: quantized client deltas with server error feedback.
+
+    The default-constructed spec is fully OFF (``enabled`` is False) and both
+    stacks then run the exact pre-compression round body — like ``FaultSpec``
+    this is a build-time branch, not a runtime mask, so a disabled spec
+    reproduces uncompressed results bitwise through segmentation and resume.
+
+    delta_dtype:
+        ``"int8"`` (symmetric round-to-nearest, +-127) or ``"fp8"``
+        (float8_e4m3fn, where the installed jax supports it); ``None`` = off.
+        Client deltas are quantized inside the traced round body with one
+        fp32 abs-max scale per (cohort slot, ``scale_block``-wide block), so
+        the (C, D) stacked buffer lives in HBM at quantized width and is
+        widened to f32 only inside the fused aggregation kernel's VMEM tiles
+        (``kernels.fused_dequant_cohort_agg``).  Sampler feedback norms are
+        computed from the dequantized values — the regret signal is what the
+        estimator actually saw.
+    error_feedback:
+        When True (default) the server carries a (D,) f32 residual in
+        ``TrainState``: each round applies ``d_hat + resid`` and stores the
+        fresh quantization error ``d_true - d_hat``, so errors telescope
+        instead of accumulating and the final loss stays allclose to the
+        uncompressed run.  The residual rides the carry, so SIGKILL/resume
+        and sampler-axis sharding stay exact under compression.
+    scale_block:
+        Block width (in flattened-param elements) sharing one fp32 scale.
+        Default 128 — one scale per TPU lane tile; D is zero-padded
+        internally to a block multiple.
+    """
+
+    delta_dtype: str | None = None
+    error_feedback: bool = True
+    scale_block: int = 128
+
+    def __post_init__(self):
+        if self.delta_dtype not in _DELTA_DTYPES:
+            raise ValueError(
+                f"unknown delta_dtype {self.delta_dtype!r}; "
+                f"options: {[d for d in _DELTA_DTYPES if d]} or null"
+            )
+        if self.delta_dtype == "fp8":
+            import jax.numpy as jnp
+
+            if not hasattr(jnp, "float8_e4m3fn"):
+                raise ValueError(
+                    "delta_dtype 'fp8' needs jnp.float8_e4m3fn (jax too old)"
+                )
+        if int(self.scale_block) <= 0:
+            raise ValueError(
+                f"scale_block must be positive, got {self.scale_block}"
+            )
+
+    @property
+    def enabled(self) -> bool:
+        """True when a quantized delta width is selected."""
+        return self.delta_dtype is not None
+
+
 @dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
     """The canonical, serializable description of one experiment.
@@ -441,6 +505,7 @@ class ExperimentSpec:
     federation: FederationSpec = dataclasses.field(default_factory=FederationSpec)
     execution: ExecutionSpec = dataclasses.field(default_factory=ExecutionSpec)
     fault: FaultSpec = dataclasses.field(default_factory=FaultSpec)
+    compression: CompressionSpec = dataclasses.field(default_factory=CompressionSpec)
 
     # -- serialization -------------------------------------------------------
     def to_dict(self) -> dict:
@@ -452,6 +517,7 @@ class ExperimentSpec:
                 "federation": dataclasses.asdict(self.federation),
                 "execution": dataclasses.asdict(self.execution),
                 "fault": dataclasses.asdict(self.fault),
+                "compression": dataclasses.asdict(self.compression),
             }
         )
 
@@ -468,6 +534,7 @@ class ExperimentSpec:
             "federation": FederationSpec,
             "execution": ExecutionSpec,
             "fault": FaultSpec,
+            "compression": CompressionSpec,
         }
         unknown = sorted(set(data) - set(sections))
         if unknown:
@@ -523,6 +590,7 @@ class ExperimentSpec:
             ckpt_every=ex.ckpt_every,
             score_history_host_offload=ex.score_history_host_offload,
             faults=self.fault if self.fault.enabled else None,
+            compression=self.compression if self.compression.enabled else None,
         )
 
     def round_spec(self):
@@ -552,4 +620,5 @@ class ExperimentSpec:
             server_lr=server_lr,
             local_batch=fed.batch_size,
             faults=self.fault if self.fault.enabled else None,
+            compression=self.compression if self.compression.enabled else None,
         )

@@ -7,7 +7,11 @@ Public API:
   regret      — dynamic/static regret trackers (eqs. 8-9)
 """
 from repro.core import estimator, regret, samplers, solver
-from repro.core.estimator import aggregate_and_error, aggregate_and_error_cohort
+from repro.core.estimator import (
+    aggregate_and_error,
+    aggregate_and_error_cohort,
+    aggregate_compressed,
+)
 from repro.core.samplers import (
     Avare,
     assert_serializable_state,
@@ -34,6 +38,7 @@ __all__ = [
     "solver",
     "aggregate_and_error",
     "aggregate_and_error_cohort",
+    "aggregate_compressed",
     "Avare",
     "ClusteredKVib",
     "KVib",

@@ -28,6 +28,7 @@ __all__ = [
     "full_aggregate_stacked",
     "aggregate_and_error",
     "aggregate_and_error_cohort",
+    "aggregate_compressed",
     "isp_variance",
     "rsp_variance_bound",
     "empirical_sq_error",
@@ -176,6 +177,59 @@ def aggregate_and_error_cohort(updates, weights: jax.Array, lam_cohort: jax.Arra
     )
     out = w2 @ flat
     return _unflatten_vector(out[0], spec), jnp.sum(out[1] ** 2)
+
+
+def aggregate_compressed(
+    updates, weights: jax.Array, lam_cohort: jax.Array, compression, resid=None
+):
+    """Compressed-width ``aggregate_and_error_cohort``: quantize the stacked
+    cohort deltas to ``compression.delta_dtype`` with per-(slot, block) fp32
+    scales, then aggregate via the fused dequantize-in-VMEM kernel so the
+    (C, D) buffer crosses HBM at quantized width exactly once.
+
+    ``resid`` enables server-side error feedback: the applied estimate is
+    ``d_hat + resid`` and the returned ``new_resid`` is the fresh
+    quantization error ``d_true - d_hat`` (``d_true`` = the uncompressed
+    aggregate of the transient f32 deltas — the value a per-client residual
+    scheme would reconstruct; errors telescope instead of accumulating).
+    With ``resid=None`` the raw ``d_hat`` is applied and ``new_resid`` is
+    None — the ablation mode where quantization error random-walks.
+
+    Returns (estimate pytree, err_sq scalar, dequantized norms (C,) f32,
+    new_resid (D,) f32 | None).  ``err_sq`` and the norms are computed from
+    the dequantized values, so the sampler's regret signal is what the
+    estimator actually saw.
+    """
+    from repro.kernels.fused_weighted_agg import (
+        dequant_cohort_agg_reference,
+        fused_dequant_cohort_agg,
+        quantize_stacked,
+    )
+
+    flat, spec = _flatten_stacked(updates)
+    d_dim = flat.shape[1]
+    q, scales = quantize_stacked(
+        flat, dtype=compression.delta_dtype, scale_block=int(compression.scale_block)
+    )
+    d_pad = q.shape[1]
+    sb = d_pad // scales.shape[1]
+    if (
+        jax.default_backend() == "tpu"
+        and d_pad % 128 == 0
+        and _block_d(d_pad) % sb == 0
+    ):
+        d_vec, sq, sqn = fused_dequant_cohort_agg(
+            q, scales, weights, lam_cohort, block_d=_block_d(d_pad)
+        )
+    else:
+        d_vec, sq, sqn = dequant_cohort_agg_reference(q, scales, weights, lam_cohort)
+    d_hat = d_vec[:d_dim]
+    new_resid = None
+    if resid is not None:
+        d_true = weights.astype(jnp.float32) @ flat
+        new_resid = d_true - d_hat
+        d_hat = d_hat + resid
+    return _unflatten_vector(d_hat, spec), sq, jnp.sqrt(sqn), new_resid
 
 
 def isp_variance(scores: jax.Array, p: jax.Array) -> jax.Array:

@@ -280,7 +280,7 @@ def deadline_survival(fault: Any) -> float:
 # ---------------------------------------------------------------------------
 
 
-def fault_state_init(fault: Any, n: int, d_dim: int = 0) -> dict:
+def fault_state_init(fault: Any, n: int, d_dim: int = 0, compression: Any = None) -> dict:
     """The fault layer's carried state: a (possibly empty) dict pytree that
     lives in ``TrainState.faults`` so every piece of fault dynamics —
     availability chain, stale-delta buffer — rides segment boundaries and
@@ -291,6 +291,11 @@ def fault_state_init(fault: Any, n: int, d_dim: int = 0) -> dict:
     * ``buf``   — the (B, D) stale-delta ring: ``delta`` (B, D) f32,
       ``dispatch``/``arrival`` (B,) int32, ``valid`` (B,) bool
       (``async_buffer > 0`` only; D is the flattened update dimension).
+      With an enabled ``compression`` the ring itself holds quantized width:
+      ``delta`` becomes (B, D_pad) int8|fp8 plus a ``scale`` (B, nb) f32
+      entry (the dominant carried/checkpointed buffer drops ~4x).  Ring
+      requantization error is NOT error-feedback-corrected — pending deltas
+      are already-dispatched network payloads.
     """
     state: dict = {}
     chain = availability_init(fault, n)
@@ -298,18 +303,31 @@ def fault_state_init(fault: Any, n: int, d_dim: int = 0) -> dict:
         state["chain"] = chain
     b = int(getattr(fault, "async_buffer", 0) or 0)
     if b > 0:
-        state["buf"] = {
-            "delta": jnp.zeros((b, int(d_dim)), jnp.float32),
-            "dispatch": jnp.zeros((b,), jnp.int32),
-            "arrival": jnp.zeros((b,), jnp.int32),
-            "valid": jnp.zeros((b,), bool),
-        }
+        if compression is not None:
+            from repro.kernels.fused_weighted_agg import quant_dtype
+
+            sb = int(compression.scale_block)
+            nb = -(-int(d_dim) // sb)
+            state["buf"] = {
+                "delta": jnp.zeros((b, nb * sb), quant_dtype(compression.delta_dtype)),
+                "scale": jnp.ones((b, nb), jnp.float32),
+                "dispatch": jnp.zeros((b,), jnp.int32),
+                "arrival": jnp.zeros((b,), jnp.int32),
+                "valid": jnp.zeros((b,), bool),
+            }
+        else:
+            state["buf"] = {
+                "delta": jnp.zeros((b, int(d_dim)), jnp.float32),
+                "dispatch": jnp.zeros((b,), jnp.int32),
+                "arrival": jnp.zeros((b,), jnp.int32),
+                "valid": jnp.zeros((b,), bool),
+            }
     return state
 
 
-def abstract_fault_state(fault: Any, n: int, d_dim: int = 0):
+def abstract_fault_state(fault: Any, n: int, d_dim: int = 0, compression: Any = None):
     """ShapeDtypeStruct pytree of ``fault_state_init`` (no allocation)."""
-    return jax.eval_shape(lambda: fault_state_init(fault, n, d_dim))
+    return jax.eval_shape(lambda: fault_state_init(fault, n, d_dim, compression))
 
 
 # ---------------------------------------------------------------------------
@@ -324,7 +342,25 @@ def _round_time(fault: Any) -> float:
     return float(rt) if rt is not None else 1.0
 
 
-def async_step(fault: Any, buf: dict, u_vec: jax.Array, t: jax.Array, key: jax.Array):
+def _ring_dequant_apply(buf: dict, coef: jax.Array, delta=None, scale=None) -> jax.Array:
+    """(B,) coefficients against a quantized ring: blockwise dequantize and
+    contract in one einsum — (B,) x (B, nb, sb) -> (D_pad,)."""
+    delta = buf["delta"] if delta is None else delta
+    scale = buf["scale"] if scale is None else scale
+    b, d_pad = delta.shape
+    nb = scale.shape[1]
+    blocks = delta.astype(jnp.float32).reshape(b, nb, d_pad // nb)
+    return jnp.einsum("b,bns->ns", coef, blocks * scale[:, :, None]).reshape(d_pad)
+
+
+def async_step(
+    fault: Any,
+    buf: dict,
+    u_vec: jax.Array,
+    t: jax.Array,
+    key: jax.Array,
+    compression: Any = None,
+):
     """One round of the stale-delta ring buffer.
 
     The round's aggregate ``u_vec`` (flattened, (D,)) is dispatched at round
@@ -335,6 +371,11 @@ def async_step(fault: Any, buf: dict, u_vec: jax.Array, t: jax.Array, key: jax.A
     whose arrival round has come is applied with a
     ``staleness_discount ** (t - dispatch)`` factor; ``delay == 0``
     degenerates to synchronous aggregation.
+
+    With an enabled ``compression`` the written slot is quantized (blockwise,
+    same scheme as the cohort buffer) and arrived rows are dequantized inside
+    the discount contraction; ``apply_vec`` comes back (D,)-sliced so the
+    caller is width-agnostic.
 
     Returns ``(new_buf, apply_vec, n_arrived)`` with ``apply_vec`` the (D,)
     staleness-discounted sum of arrived deltas for this round's server step.
@@ -348,22 +389,44 @@ def async_step(fault: Any, buf: dict, u_vec: jax.Array, t: jax.Array, key: jax.A
         jnp.floor(lat / jnp.float32(rt)).astype(jnp.int32), 0, b - 1
     )
     slot = jnp.mod(t, b)
-    delta = jax.lax.dynamic_update_index_in_dim(
-        buf["delta"], u_vec.astype(jnp.float32), slot, 0
-    )
+    d_dim = u_vec.shape[0]
+    if compression is not None:
+        from repro.kernels.fused_weighted_agg import quantize_stacked
+
+        q_row, s_row = quantize_stacked(
+            u_vec[None, :],
+            dtype=compression.delta_dtype,
+            scale_block=int(compression.scale_block),
+        )
+        delta = jax.lax.dynamic_update_index_in_dim(buf["delta"], q_row[0], slot, 0)
+        scale = jax.lax.dynamic_update_index_in_dim(buf["scale"], s_row[0], slot, 0)
+    else:
+        delta = jax.lax.dynamic_update_index_in_dim(
+            buf["delta"], u_vec.astype(jnp.float32), slot, 0
+        )
     dispatch = buf["dispatch"].at[slot].set(t)
     arrival = buf["arrival"].at[slot].set(t + delay)
     valid = buf["valid"].at[slot].set(True)
     arrived = jnp.logical_and(valid, arrival <= t)
     disc = rho ** (t - dispatch).astype(jnp.float32)
     coef = jnp.where(arrived, disc, 0.0)
-    apply_vec = coef @ delta  # (B,) @ (B, D) -> (D,)
-    new_buf = {
-        "delta": delta,
-        "dispatch": dispatch,
-        "arrival": arrival,
-        "valid": jnp.logical_and(valid, ~arrived),
-    }
+    if compression is not None:
+        apply_vec = _ring_dequant_apply(buf, coef, delta=delta, scale=scale)[:d_dim]
+        new_buf = {
+            "delta": delta,
+            "scale": scale,
+            "dispatch": dispatch,
+            "arrival": arrival,
+            "valid": jnp.logical_and(valid, ~arrived),
+        }
+    else:
+        apply_vec = coef @ delta  # (B,) @ (B, D) -> (D,)
+        new_buf = {
+            "delta": delta,
+            "dispatch": dispatch,
+            "arrival": arrival,
+            "valid": jnp.logical_and(valid, ~arrived),
+        }
     return new_buf, apply_vec, jnp.sum(arrived.astype(jnp.int32))
 
 
@@ -372,10 +435,14 @@ def flush_pending(buf: dict, t_end, rho: float) -> jax.Array:
     still pending when the horizon ends.  Mid-run segment boundaries leave
     the buffer intact in the carry (segmentation stays bitwise-neutral even
     in async mode); only the end of the horizon drains it, deterministically
-    from the carried state — a resumed run flushes identically."""
+    from the carried state — a resumed run flushes identically.  A quantized
+    ring (``scale`` key present) is dequantized in the contraction; the
+    result is then (D_pad,) and callers slice/unflatten to D."""
     t_end = jnp.asarray(t_end, jnp.int32)
     disc = jnp.float32(rho) ** (t_end - buf["dispatch"]).astype(jnp.float32)
     coef = jnp.where(buf["valid"], disc, 0.0)
+    if "scale" in buf:
+        return _ring_dequant_apply(buf, coef)
     return coef @ buf["delta"]
 
 

@@ -66,6 +66,20 @@ Everything else in the round is width-honest either way: sampler feedback and
 state are legitimately (N,)-vectors (scatters of (C,) values), train-loss is
 a (C,)-reduction.
 
+A third, orthogonal axis is the *delta width* (``CompressionSpec``): the
+C-width stacked buffer may be held at int8/fp8 instead of f32, with one fp32
+abs-max scale per (slot, block) and dequantization fused into the aggregate
+(``estimator.aggregate_compressed`` /
+``kernels.fused_dequant_cohort_agg``).  The contract stays C-width — nothing
+(N, D)-shaped appears — but the equivalence weakens one more notch: the
+compressed aggregate matches the f32 C-width one only to quantization
+tolerance, with the server-side error-feedback residual restoring the
+*trajectory* (not the per-round aggregate) to f32-allclose.  Because the
+deployable compressed round can no longer reproduce the oracle contraction,
+``exact_oracle_equiv`` + compression raises at build time.  Sampler feedback
+remains width-honest: the (C,) norms the samplers consume are computed from
+the *dequantized* deltas, i.e. the same values the estimate actually used.
+
 Determinism
 -----------
 When ``|S| <= C`` the selection keeps *all* of ``S`` with weights bitwise

@@ -69,6 +69,12 @@ class RoundSpec:
     # (``build_fed_scan_segment``) — the monolithic ``build_fed_scan`` and
     # the host launcher loop raise.
     faults: object | None = None
+    # Delta-width compression (a ``repro.api.CompressionSpec`` or None — see
+    # ``FedConfig.compression``).  None builds the exact pre-compression scan
+    # body.  Only ``client_parallel`` supports it (cohort_sequential never
+    # materializes a (C, D) stacked buffer to compress); enabled compression
+    # requires the segment-shaped runner, like faults.
+    compression: object | None = None
 
 
 def _tree_sq_norm(delta):
@@ -107,6 +113,15 @@ def build_round_step(cfg: ArchConfig, spec: RoundSpec, constrain=None) -> Callab
     mode = cfg.round_mode
     if constrain is None:
         constrain = lambda tree: tree
+    comp = spec.compression
+    comp_on = comp is not None
+    if comp_on and mode != "client_parallel":
+        raise ValueError(
+            f"RoundSpec.compression needs round_mode='client_parallel' (got "
+            f"{mode!r}): cohort_sequential accumulates per-member deltas one "
+            "at a time and never materializes the (C, D) stacked buffer that "
+            "delta-width compression shrinks"
+        )
 
     def per_client(params, tok, tgt, aux):
         batches = (tok, tgt) if aux is None else (tok, tgt, aux)
@@ -122,6 +137,34 @@ def build_round_step(cfg: ArchConfig, spec: RoundSpec, constrain=None) -> Callab
         )
 
     if mode == "client_parallel":
+        if comp_on:
+            from repro.core import estimator
+
+            def round_step(
+                params, tokens, targets, weights, aux_embeds=None, resid=None
+            ):
+                def one(tok, tgt, aux):
+                    return per_client(params, tok, tgt, aux)
+
+                if aux_embeds is None:
+                    deltas, losses, _ = jax.vmap(
+                        lambda tok, tgt: one(tok, tgt, None)
+                    )(tokens, targets)
+                else:
+                    deltas, losses, _ = jax.vmap(one)(tokens, targets, aux_embeds)
+                # Compressed aggregation: the stacked cohort deltas are
+                # quantized and reduced by the fused dequant kernel; passing
+                # ``weights`` for lam_cohort zeroes the (unused here) error
+                # row.  Feedback norms come from the dequantized values.
+                d, _, norms, new_resid = estimator.aggregate_compressed(
+                    deltas, weights, weights, comp, resid
+                )
+                new_params = jax.tree_util.tree_map(
+                    lambda p, g: p - spec.server_lr * g.astype(p.dtype), params, d
+                )
+                return new_params, norms, cohort_mean_loss(losses, weights), new_resid
+
+            return round_step
 
         def round_step(params, tokens, targets, weights, aux_embeds=None):
             def one(tok, tgt, aux):
@@ -222,6 +265,13 @@ def build_fed_scan(
             "stale-delta buffer) lives in the TrainState carry, which the "
             "monolithic build_fed_scan signature cannot thread"
         )
+    if spec.compression is not None:
+        raise ValueError(
+            "RoundSpec.compression requires the segment-shaped runner "
+            "(build_fed_scan_segment): the error-feedback residual lives in "
+            "the TrainState carry, which the monolithic build_fed_scan "
+            "signature cannot thread"
+        )
     body = _build_scan_body(cfg, spec, sampler, dataset, mesh, constrain)
 
     donate = (0,) if jax.default_backend() != "cpu" else ()
@@ -257,6 +307,9 @@ def _build_scan_body(cfg, spec, sampler, dataset, mesh, constrain):
     deadline_on = fault_on and faults.deadline is not None
     async_on = fault_on and int(faults.async_buffer) > 0
     surv = stragglers.deadline_survival(faults) if deadline_on else 1.0
+    comp = spec.compression
+    comp_on = comp is not None
+    ef_on = comp_on and bool(comp.error_feedback)
 
     if mesh is not None:
         from jax.sharding import NamedSharding, PartitionSpec
@@ -300,6 +353,9 @@ def _build_scan_body(cfg, spec, sampler, dataset, mesh, constrain):
         return shard_batches(zero_pad(feats)), shard_batches(zero_pad(labs))
 
     def body(carry, xs):
+        c_state = {}
+        if ef_on:
+            carry, c_state = carry[:-1], carry[-1]
         if fault_on:
             params, s_state, f_state = carry
             t, k_draw, k_data = xs
@@ -343,7 +399,14 @@ def _build_scan_body(cfg, spec, sampler, dataset, mesh, constrain):
             sel = mask_selection(sel, ~late_c, 1.0 / surv)
             deadline_dropped = jnp.sum(late_c.astype(jnp.int32))
         tokens, targets = gather_cohort(sel, k_data)
-        new_params, norms, loss = round_step(params, tokens, targets, sel.weights)
+        if comp_on:
+            new_params, norms, loss, new_resid = round_step(
+                params, tokens, targets, sel.weights, resid=c_state.get("resid")
+            )
+            if ef_on:
+                c_state = {"resid": new_resid}
+        else:
+            new_params, norms, loss = round_step(params, tokens, targets, sel.weights)
         if async_on:
             # round_step already applied x - server_lr * d; recover the
             # update u = server_lr * d, route it through the carried (B, D)
@@ -355,6 +418,7 @@ def _build_scan_body(cfg, spec, sampler, dataset, mesh, constrain):
                 stragglers.tree_to_vec(u),
                 t,
                 jax.random.fold_in(k_draw, 103),
+                compression=comp,
             )
             f_state = {**f_state, "buf": new_buf}
             d_apply = stragglers.vec_to_tree(apply_vec, params)
@@ -377,9 +441,12 @@ def _build_scan_body(cfg, spec, sampler, dataset, mesh, constrain):
         }
         if deadline_on:
             metrics["deadline_dropped"] = deadline_dropped
+        out = (params, s_state)
         if fault_on:
-            return (params, s_state, f_state), metrics
-        return (params, s_state), metrics
+            out = out + (f_state,)
+        if ef_on:
+            out = out + (c_state,)
+        return out, metrics
 
     return body
 
@@ -410,10 +477,21 @@ def scan_body_for_lint(
     if spec.faults is not None:
         carry = carry + (
             stragglers.abstract_fault_state(
-                spec.faults, dataset.n_clients, stragglers.flat_dim(params)
+                spec.faults,
+                dataset.n_clients,
+                stragglers.flat_dim(params),
+                spec.compression,
             ),
         )
         xs = (jax.ShapeDtypeStruct((), jnp.int32), key, key)
+    if spec.compression is not None and spec.compression.error_feedback:
+        carry = carry + (
+            {
+                "resid": jax.ShapeDtypeStruct(
+                    (stragglers.flat_dim(params),), jnp.float32
+                )
+            },
+        )
     return body, (carry, xs)
 
 
@@ -455,6 +533,7 @@ def build_fed_scan_segment(
 
     body = _build_scan_body(cfg, spec, sampler, dataset, mesh, constrain)
     fault_on = spec.faults is not None
+    ef_on = spec.compression is not None and bool(spec.compression.error_feedback)
 
     def derive_step(k, _):
         k, k_draw, k_data = jax.random.split(k, 3)
@@ -462,12 +541,21 @@ def build_fed_scan_segment(
 
     def fault_init(params):
         return stragglers.fault_state_init(
-            spec.faults, dataset.n_clients, stragglers.flat_dim(params)
+            spec.faults,
+            dataset.n_clients,
+            stragglers.flat_dim(params),
+            spec.compression,
         )
+
+    def comp_init(params):
+        return {"resid": jnp.zeros((stragglers.flat_dim(params),), jnp.float32)}
 
     def make_state(params, s_state, key, total_rounds: int) -> TrainState:
         f_state = fault_init(params) if fault_on else ()
+        c_state = comp_init(params) if ef_on else ()
         carry0 = (params, s_state) + ((f_state,) if fault_on else ())
+        if ef_on:
+            carry0 = carry0 + (c_state,)
         xs0 = (
             (jnp.zeros((), jnp.int32), key, key)
             if fault_on
@@ -481,6 +569,7 @@ def build_fed_scan_segment(
             round=jnp.zeros((), jnp.int32),
             key=key,
             faults=f_state,
+            compression=c_state,
         )
 
     placement = None
@@ -491,9 +580,12 @@ def build_fed_scan_segment(
         key_s = jax.eval_shape(lambda: jax.random.PRNGKey(0))
         params_s = jax.eval_shape(lambda k: transformer.init_params(cfg, k), key_s)
         f_state_s = jax.eval_shape(fault_init, params_s) if fault_on else ()
+        c_state_s = jax.eval_shape(comp_init, params_s) if ef_on else ()
         carry_s = (params_s, sampler.abstract_state()) + (
             (f_state_s,) if fault_on else ()
         )
+        if ef_on:
+            carry_s = carry_s + (c_state_s,)
         xs_s = (
             (jax.ShapeDtypeStruct((), jnp.int32), key_s, key_s)
             if fault_on
@@ -507,12 +599,13 @@ def build_fed_scan_segment(
             round=jax.ShapeDtypeStruct((), jnp.int32),
             key=key_s,
             faults=f_state_s,
+            compression=c_state_s,
         )
         placement = build_placement(template, sampler)
 
     segment = make_segment_fn(
         body, derive_step,
         with_opt_state=False, with_round_index=fault_on, with_faults=fault_on,
-        donate=donate, placement=placement,
+        with_compression=ef_on, donate=donate, placement=placement,
     )
     return segment, make_state

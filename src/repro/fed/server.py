@@ -143,6 +143,13 @@ class FedConfig:
     # through the traced round, with the fault state carried in
     # ``TrainState.faults``.
     faults: object | None = None
+    # Delta-width compression layer: a ``repro.api.CompressionSpec`` (duck-
+    # typed) or None.  None (default) builds the exact pre-compression round
+    # body.  When set, client deltas are quantized to int8/fp8 with
+    # per-(slot, block) fp32 scales inside the traced round and aggregated by
+    # the fused dequantize-in-VMEM kernel; with ``error_feedback`` the server
+    # carries a (D,) f32 residual in ``TrainState.compression``.
+    compression: object | None = None
 
     def cohort_slots(self, n_clients: int) -> int:
         c = 2 * self.budget if self.cohort is None else int(self.cohort)
@@ -261,7 +268,17 @@ def _build_round_body(task: Task, dataset, sampler: samplers.Sampler, cfg: FedCo
     with survivor weights rescaled by ``1 / P(latency <= deadline)``, and
     buffered-async mode routes the round's aggregate through a carried
     (B, D) stale-delta ring instead of applying it immediately.  With
-    ``faults=None`` the built body is the exact pre-fault program."""
+    ``faults=None`` the built body is the exact pre-fault program.
+
+    ``cfg.compression`` (a ``repro.api.CompressionSpec``) likewise switches
+    at BUILD time: the stacked client deltas are quantized inside the round
+    (``estimator.aggregate_compressed``), sampler feedback norms come from
+    the dequantized values, and with error feedback the carry grows a
+    trailing ``{"resid": (D,) f32}`` element — the applied update is
+    ``d_hat + resid`` and the residual absorbs the fresh quantization error
+    ``d_true - d_hat`` so errors telescope across rounds.  With
+    ``compression=None`` the built body is the exact pre-compression
+    program."""
 
     lam = dataset.lam
     n = dataset.n_clients
@@ -280,7 +297,21 @@ def _build_round_body(task: Task, dataset, sampler: samplers.Sampler, cfg: FedCo
     # deadline survivors (raises if the deadline is unsatisfiable).
     surv = stragglers.deadline_survival(faults) if deadline_on else 1.0
 
+    comp = cfg.compression
+    comp_on = comp is not None
+    ef_on = comp_on and bool(comp.error_feedback)
+    if comp_on and not cfg.oracle_metrics and cfg.exact_oracle_equiv:
+        raise ValueError(
+            "compression is incompatible with exact_oracle_equiv: the N-width "
+            "scatter path exists to reproduce the oracle contraction bitwise, "
+            "which quantization cannot; use the cohort-width aggregation "
+            "(exact_oracle_equiv=False)"
+        )
+
     def body(carry, xs):
+        c_state = {}
+        if ef_on:
+            carry, c_state = carry[:-1], carry[-1]
         if fault_on:
             params, opt_state, s_state, f_state = carry
         else:
@@ -333,8 +364,22 @@ def _build_round_body(task: Task, dataset, sampler: samplers.Sampler, cfg: FedCo
             cohort_size = (
                 jnp.sum(active.astype(jnp.int32)) if deadline_on else draw.size
             )
-            # sq_err shares the one pass over the stacked (N, ...) deltas.
-            d_est, sq_err = estimator.aggregate_and_error(deltas, weights, lam)
+            if comp_on:
+                # Compressed width: quantize the (N, ...) stacked deltas and
+                # aggregate via the fused dequant kernel; the sampler's
+                # feedback norms are recomputed from the dequantized values
+                # (the regret signal is what the estimator actually saw), and
+                # with error feedback the applied estimate is d_hat + resid.
+                d_est, sq_err, norms_dq, new_resid = estimator.aggregate_compressed(
+                    deltas, weights, lam, comp, c_state.get("resid")
+                )
+                feedback_full = sampler.shard_constrain(lam * norms_dq)
+                feedback = feedback_full * active
+                if ef_on:
+                    c_state = {"resid": new_resid}
+            else:
+                # sq_err shares the one pass over the stacked (N, ...) deltas.
+                d_est, sq_err = estimator.aggregate_and_error(deltas, weights, lam)
         else:
             # Deployable: select C slots from the draw (fold_in keeps the
             # draw's key stream untouched) and train only those clients.
@@ -359,12 +404,14 @@ def _build_round_body(task: Task, dataset, sampler: samplers.Sampler, cfg: FedCo
                 deadline_dropped = jnp.sum(late_c.astype(jnp.int32))
             # Sampler feedback is an (N,)-vector scatter of a (C,) vector —
             # the sampler state is legitimately N-sized; only the (N, D)
-            # delta pytree scatter is the scale problem.
-            feedback = sampler.shard_constrain(
-                fed_cohort.scatter_cohort(
-                    jnp.where(sel.valid, lam[sel.ids] * norms_c, 0.0), sel, n
+            # delta pytree scatter is the scale problem.  (Compressed rounds
+            # scatter the dequantized norms instead, below.)
+            if not comp_on:
+                feedback = sampler.shard_constrain(
+                    fed_cohort.scatter_cohort(
+                        jnp.where(sel.valid, lam[sel.ids] * norms_c, 0.0), sel, n
+                    )
                 )
-            )
             # Unbiased cohort estimate of the full weighted loss sum_i lam_i l_i.
             train_loss = jnp.sum(jnp.where(sel.valid, sel.weights * losses_c, 0.0))
             # The clients actually contacted (post-overflow-drop), not |S|.
@@ -377,6 +424,23 @@ def _build_round_body(task: Task, dataset, sampler: samplers.Sampler, cfg: FedCo
                 deltas = fed_cohort.scatter_cohort(deltas_c, sel, n)
                 agg_weights = fed_cohort.scatter_cohort(sel.weights, sel, n)
                 d_est, sq_err = estimator.aggregate_and_error(deltas, agg_weights, lam)
+            elif comp_on:
+                # Compressed cohort width: the (C, D) stacked buffer lives at
+                # quantized width in HBM and is widened per VMEM tile inside
+                # the fused dequant-aggregate kernel.  Feedback norms come
+                # from the same pass (dequantized values); error feedback
+                # applies/updates the carried residual.
+                lam_c = jnp.where(sel.valid, lam[sel.ids], 0.0)
+                d_est, sq_err, norms_dq, new_resid = estimator.aggregate_compressed(
+                    deltas_c, sel.weights, lam_c, comp, c_state.get("resid")
+                )
+                feedback = sampler.shard_constrain(
+                    fed_cohort.scatter_cohort(
+                        jnp.where(sel.valid, lam[sel.ids] * norms_dq, 0.0), sel, n
+                    )
+                )
+                if ef_on:
+                    c_state = {"resid": new_resid}
             else:
                 # Cohort-width aggregation: O(C*D), no (N, D) buffer exists
                 # anywhere in the round (tests assert this on the jaxpr).
@@ -394,7 +458,12 @@ def _build_round_body(task: Task, dataset, sampler: samplers.Sampler, cfg: FedCo
             # discounted deltas whose arrival round has come (possibly none).
             u_vec = stragglers.tree_to_vec(d_est)
             new_buf, apply_vec, _ = stragglers.async_step(
-                faults, f_state["buf"], u_vec, t, jax.random.fold_in(k_sample, 103)
+                faults,
+                f_state["buf"],
+                u_vec,
+                t,
+                jax.random.fold_in(k_sample, 103),
+                compression=comp,
             )
             f_state = {**f_state, "buf": new_buf}
             d_apply = stragglers.vec_to_tree(apply_vec, d_est)
@@ -436,9 +505,12 @@ def _build_round_body(task: Task, dataset, sampler: samplers.Sampler, cfg: FedCo
                 lambda p: jnp.full((), jnp.nan, jnp.float32),
                 params,
             )
+        out = (params, opt_state, s_state)
         if fault_on:
-            return (params, opt_state, s_state, f_state), metrics
-        return (params, opt_state, s_state), metrics
+            out = out + (f_state,)
+        if ef_on:
+            out = out + (c_state,)
+        return out, metrics
 
     return body
 
@@ -466,8 +538,19 @@ def round_body_for_lint(
     if cfg.faults is not None:
         carry = carry + (
             stragglers.abstract_fault_state(
-                cfg.faults, dataset.n_clients, stragglers.flat_dim(params)
+                cfg.faults,
+                dataset.n_clients,
+                stragglers.flat_dim(params),
+                cfg.compression,
             ),
+        )
+    if cfg.compression is not None and cfg.compression.error_feedback:
+        carry = carry + (
+            {
+                "resid": jax.ShapeDtypeStruct(
+                    (stragglers.flat_dim(params),), jnp.float32
+                )
+            },
         )
     xs = (jax.ShapeDtypeStruct((), jnp.int32), key, key)
     return body, (carry, xs)
@@ -587,6 +670,7 @@ def build_segment_runner(
     backends)."""
     body = _build_round_body(task, dataset, sampler, cfg, eval_data)
     fault_on = cfg.faults is not None
+    ef_on = cfg.compression is not None and bool(cfg.compression.error_feedback)
 
     key = jax.random.PRNGKey(cfg.seed)
     key, init_key = jax.random.split(key)
@@ -595,15 +679,22 @@ def build_segment_runner(
     s_state = sampler.init()
     f_state = (
         stragglers.fault_state_init(
-            cfg.faults, dataset.n_clients, stragglers.flat_dim(params)
+            cfg.faults, dataset.n_clients, stragglers.flat_dim(params), cfg.compression
         )
         if fault_on
+        else ()
+    )
+    c_state = (
+        {"resid": jnp.zeros((stragglers.flat_dim(params),), jnp.float32)}
+        if ef_on
         else ()
     )
 
     carry0 = (params, opt_state, s_state)
     if fault_on:
         carry0 = carry0 + (f_state,)
+    if ef_on:
+        carry0 = carry0 + (c_state,)
     metrics = init_metric_buffers(
         body,
         carry0,
@@ -628,6 +719,7 @@ def build_segment_runner(
         round=jnp.zeros((), jnp.int32),
         key=key,
         faults=f_state,
+        compression=c_state,
     )
     placement = (
         build_placement(init_state, sampler) if sampler.shard is not None else None
@@ -635,7 +727,7 @@ def build_segment_runner(
     segment = make_segment_fn(
         body, _derive_keys_step,
         with_opt_state=True, with_round_index=True, with_faults=fault_on,
-        donate=donate, placement=placement,
+        with_compression=ef_on, donate=donate, placement=placement,
     )
     return segment, init_state
 
@@ -714,11 +806,20 @@ def run_federated(
         opt_state = cfg.server_opt.init(params)
         s_state = sampler.init()
         fault_on = cfg.faults is not None
+        ef_on = cfg.compression is not None and bool(cfg.compression.error_feedback)
         f_state = (
             stragglers.fault_state_init(
-                cfg.faults, dataset.n_clients, stragglers.flat_dim(params)
+                cfg.faults,
+                dataset.n_clients,
+                stragglers.flat_dim(params),
+                cfg.compression,
             )
             if fault_on
+            else ()
+        )
+        c_state = (
+            {"resid": jnp.zeros((stragglers.flat_dim(params),), jnp.float32)}
+            if ef_on
             else ()
         )
 
@@ -740,10 +841,14 @@ def run_federated(
             carry_in = (params, opt_state, s_state)
             if fault_on:
                 carry_in = carry_in + (f_state,)
+            if ef_on:
+                carry_in = carry_in + (c_state,)
             carry, m = step(
                 carry_in,
                 (ts[t], round_keys[t, 0], round_keys[t, 1]),
             )
+            if ef_on:
+                carry, c_state = carry[:-1], carry[-1]
             if fault_on:
                 params, opt_state, s_state, f_state = carry
             else:

@@ -39,6 +39,13 @@ needs to continue the run bit-for-bit must live here as an *array* leaf:
                    Living here is what makes a SIGKILL'd faulted run resume
                    bit-for-bit and keeps async segmentation bitwise-neutral
                    (pending deltas ride the boundary instead of flushing).
+* ``compression``— the delta-compression layer's carried state when a
+                   ``repro.api.CompressionSpec`` with error feedback is
+                   enabled: ``{"resid": (D,) f32}``, the server-side
+                   error-feedback residual.  Riding the carry keeps the
+                   quantization-error telescope exact across segment
+                   boundaries, SIGKILL/resume, and mesh re-shapes;
+                   ``()`` otherwise.
 
 Segmentation is a pure reshaping of the horizon: for any ``ckpt_every`` the
 per-round bodies see the same carries, keys, and round indices, so results
@@ -81,6 +88,7 @@ class TrainState:
     round: jax.Array  # scalar int32 — next round to execute
     key: jax.Array  # PRNG key for the remaining rounds' key derivation
     faults: Any = ()  # fault-layer carry (FaultSpec enabled) or ()
+    compression: Any = ()  # error-feedback residual carry (CompressionSpec) or ()
 
     def tree_flatten(self):
         children = (
@@ -91,6 +99,7 @@ class TrainState:
             self.round,
             self.key,
             self.faults,
+            self.compression,
         )
         return children, None
 
@@ -159,6 +168,9 @@ def build_placement(template: TrainState, sampler) -> TrainState:
         # availability chain lives split along the sampler's mesh axis, the
         # (B, D) stale-delta buffer (B != N) falls through to replicated.
         faults=jax.tree_util.tree_map(sampler_rule, template.faults),
+        # The error-feedback residual is (D,)-shaped — D could coincidentally
+        # equal N, so it gets an explicit replicated rule, not sampler_rule.
+        compression=jax.tree_util.tree_map(lambda _: rep, template.compression),
     )
 
 
@@ -169,6 +181,7 @@ def make_segment_fn(
     with_opt_state: bool,
     with_round_index: bool,
     with_faults: bool = False,
+    with_compression: bool = False,
     donate: bool = True,
     placement=None,
 ):
@@ -188,7 +201,9 @@ def make_segment_fn(
        when ``with_opt_state`` else ``(params, sampler)``, with
        ``state.faults`` appended as a trailing carry element when
        ``with_faults`` (the fault layer's availability chain / stale-delta
-       buffer advance inside the scan exactly like the sampler state); xs
+       buffer advance inside the scan exactly like the sampler state), and
+       ``state.compression`` (the error-feedback residual) appended after
+       it when ``with_compression``; xs
        ``(ts, pairs[:, 0], pairs[:, 1])`` with ``ts = round + arange`` when
        ``with_round_index`` else the raw ``pairs``;
     3. stitches the stacked per-round metrics into the full-horizon buffers
@@ -228,12 +243,18 @@ def make_segment_fn(
             carry = (state.params, state.sampler)
         if with_faults:
             carry = carry + (state.faults,)
+        if with_compression:
+            carry = carry + (state.compression,)
         if with_round_index:
             ts = state.round + jnp.arange(n_rounds, dtype=jnp.int32)
             xs = (ts, pairs[:, 0], pairs[:, 1])
         else:
             xs = pairs
         carry, stacked = jax.lax.scan(body, carry, xs)
+        if with_compression:
+            carry, c_state = carry[:-1], carry[-1]
+        else:
+            c_state = state.compression
         if with_faults:
             carry, f_state = carry[:-1], carry[-1]
         else:
@@ -260,6 +281,7 @@ def make_segment_fn(
             round=state.round + n_rounds,
             key=key,
             faults=f_state,
+            compression=c_state,
         )
 
     lint_info = {
@@ -268,6 +290,7 @@ def make_segment_fn(
         "with_opt_state": with_opt_state,
         "with_round_index": with_round_index,
         "with_faults": with_faults,
+        "with_compression": with_compression,
         "donate": donate,
         "donate_argnums": donate_argnums,
         "placement": placement,

@@ -7,9 +7,12 @@ pure-jnp oracle (ref.py).  CPU CI validates with interpret=True.
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.fused_weighted_agg import (
+    dequantize_stacked,
     fused_cohort_agg_and_error,
+    fused_dequant_cohort_agg,
     fused_multi_weighted_agg,
     fused_weighted_agg,
+    quantize_stacked,
 )
 from repro.kernels.rmsnorm import rmsnorm
 from repro.kernels.sharded_waterfill import waterfill_level_stats
@@ -18,10 +21,13 @@ from repro.kernels.ssd_scan import ssd_scan
 __all__ = [
     "ops",
     "ref",
+    "dequantize_stacked",
     "flash_attention",
     "fused_cohort_agg_and_error",
+    "fused_dequant_cohort_agg",
     "fused_multi_weighted_agg",
     "fused_weighted_agg",
+    "quantize_stacked",
     "rmsnorm",
     "ssd_scan",
     "waterfill_level_stats",

@@ -28,7 +28,89 @@ __all__ = [
     "fused_weighted_agg",
     "fused_multi_weighted_agg",
     "fused_cohort_agg_and_error",
+    "quantize_stacked",
+    "dequantize_stacked",
+    "dequant_cohort_agg_reference",
+    "fused_dequant_cohort_agg",
 ]
+
+# Saturation point of each supported delta width: int8 symmetric round-to-
+# nearest keeps +-127 (the -128 code is unused so the grid is symmetric);
+# float8_e4m3fn's largest finite value is 448.
+_QMAX = {"int8": 127.0, "fp8": 448.0}
+
+
+def quant_dtype(name: str):
+    """jnp dtype for a delta-width name ('int8' | 'fp8'); raises if the
+    installed jax lacks fp8 support."""
+    if name == "int8":
+        return jnp.int8
+    if name == "fp8":
+        if not hasattr(jnp, "float8_e4m3fn"):
+            raise ValueError("fp8 delta width needs jnp.float8_e4m3fn (jax too old)")
+        return jnp.float8_e4m3fn
+    raise ValueError(f"unknown delta dtype {name!r}")
+
+
+def quantize_stacked(flat: jax.Array, *, dtype: str = "int8", scale_block: int = 128):
+    """Blockwise symmetric quantization of stacked (C, D) f32 deltas.
+
+    Each slot's flattened delta is split into ``scale_block``-wide blocks with
+    one fp32 abs-max scale per (slot, block); D is zero-padded internally to a
+    block multiple.  Zero blocks get scale 1.0 (any positive value dequantizes
+    them exactly, and 1.0 keeps the scale tensor free of zeros/denormals).
+
+    Returns (q (C, D_pad) int8|fp8, scales (C, nb) f32) with
+    ``D_pad = nb * scale_block``.
+    """
+    c, d = flat.shape
+    sb = int(scale_block)
+    nb = -(-d // sb)
+    d_pad = nb * sb
+    flat = flat.astype(jnp.float32)
+    if d_pad != d:
+        flat = jnp.pad(flat, ((0, 0), (0, d_pad - d)))
+    blocks = flat.reshape(c, nb, sb)
+    absmax = jnp.max(jnp.abs(blocks), axis=2)
+    qmax = _QMAX[dtype]
+    scales = jnp.where(absmax > 0.0, absmax / qmax, 1.0).astype(jnp.float32)
+    scaled = blocks / scales[:, :, None]
+    if dtype == "int8":
+        q = jnp.clip(jnp.round(scaled), -qmax, qmax).astype(jnp.int8)
+    else:
+        q = scaled.astype(quant_dtype(dtype))
+    return q.reshape(c, d_pad), scales
+
+
+def dequantize_stacked(q: jax.Array, scales: jax.Array) -> jax.Array:
+    """Inverse of ``quantize_stacked``: (C, D_pad) quantized + (C, nb) scales
+    -> (C, D_pad) f32.  Reference/CPU path — the fused kernel below performs
+    the same widening per VMEM tile instead."""
+    c, d_pad = q.shape
+    nb = scales.shape[1]
+    sb = d_pad // nb
+    blocks = q.astype(jnp.float32).reshape(c, nb, sb) * scales[:, :, None]
+    return blocks.reshape(c, d_pad)
+
+
+def dequant_cohort_agg_reference(
+    q: jax.Array, scales: jax.Array, w: jax.Array, lam_c: jax.Array
+):
+    """Pure-jnp oracle for ``fused_dequant_cohort_agg``: blockwise dequant +
+    (2, C) x (C, D_pad) contraction + per-slot squared norms.
+
+    Returns (d (D_pad,) f32, err_sq scalar f32, sq_norms (C,) f32).
+    """
+    c, d_pad = q.shape
+    nb = scales.shape[1]
+    sb = d_pad // nb
+    blocks = q.astype(jnp.float32).reshape(c, nb, sb) * scales[:, :, None]
+    w2 = jnp.stack(
+        [w.astype(jnp.float32), w.astype(jnp.float32) - lam_c.astype(jnp.float32)]
+    )
+    out = jnp.einsum("mc,cbs->mbs", w2, blocks).reshape(2, d_pad)
+    sq_norms = jnp.sum(blocks * blocks, axis=(1, 2))
+    return out[0], jnp.sum(out[1] ** 2), sq_norms
 
 
 def _kernel(g_ref, w_ref, d_ref, sq_ref, acc_ref, *, n_chunks):
@@ -182,3 +264,89 @@ def fused_cohort_agg_and_error(
         interpret=interpret,
     )(g, w2)
     return d_out[0], err[0, 0]
+
+
+def _dequant_cohort_kernel(
+    q_ref, s_ref, w2_ref, d_ref, err_ref, sqn_ref, acc_err, acc_sqn, *, n_chunks, sb
+):
+    ic = pl.program_id(0)
+
+    @pl.when(ic == 0)
+    def _init():
+        acc_err[...] = jnp.zeros_like(acc_err)
+        acc_sqn[...] = jnp.zeros_like(acc_sqn)
+
+    q = q_ref[...].astype(jnp.float32)  # (C, BD) widened in VMEM only
+    s = s_ref[...].astype(jnp.float32)  # (C, BD // sb)
+    c, bd = q.shape
+    g = (q.reshape(c, bd // sb, sb) * s[:, :, None]).reshape(c, bd)
+    w2 = w2_ref[...].astype(jnp.float32)  # (2, C)
+    out = jnp.dot(w2, g, preferred_element_type=jnp.float32)  # (2, BD)
+    d_ref[...] = out[:1]
+    acc_err[0, 0] += jnp.sum(out[1] ** 2)
+    acc_sqn[:, 0] += jnp.sum(g * g, axis=1)
+
+    @pl.when(ic == n_chunks - 1)
+    def _done():
+        err_ref[...] = acc_err[:1, :1]
+        sqn_ref[...] = acc_sqn[:, :1]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def fused_dequant_cohort_agg(
+    q: jax.Array,
+    scales: jax.Array,
+    w: jax.Array,
+    lam_c: jax.Array,
+    *,
+    block_d: int = 2048,
+    interpret: bool = False,
+):
+    """Compressed-width ``fused_cohort_agg_and_error``: the (C, D_pad) stacked
+    cohort buffer stays int8/fp8 in HBM and is widened to f32 one VMEM tile at
+    a time, fused with the weighted estimate, the squared-error diagnostic,
+    and the per-slot dequantized squared norms — the sampler's feedback signal
+    computed from exactly the values the estimator saw.  Nothing (C, D)-shaped
+    at f32 ever reaches HBM.
+
+    q (C, D_pad) int8|fp8 from ``quantize_stacked``; scales (C, nb) f32 with
+    ``nb = D_pad / scale_block``; w / lam_c as in ``fused_cohort_agg_and_error``.
+
+    Returns (d (D_pad,) f32, err_sq scalar f32, sq_norms (C,) f32).
+    """
+    c, d_pad = q.shape
+    nb = scales.shape[1]
+    assert d_pad % nb == 0, (d_pad, nb)
+    sb = d_pad // nb
+    bd = min(block_d, d_pad)
+    assert d_pad % bd == 0 and bd % sb == 0, (d_pad, bd, sb)
+    n_chunks = d_pad // bd
+    w2 = jnp.stack(
+        [w.astype(jnp.float32), w.astype(jnp.float32) - lam_c.astype(jnp.float32)]
+    )
+    kernel = functools.partial(_dequant_cohort_kernel, n_chunks=n_chunks, sb=sb)
+    d_out, err, sqn = pl.pallas_call(
+        kernel,
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((c, bd), lambda ic: (0, ic)),
+            pl.BlockSpec((c, bd // sb), lambda ic: (0, ic)),
+            pl.BlockSpec((2, c), lambda ic: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bd), lambda ic: (0, ic)),
+            pl.BlockSpec((1, 1), lambda ic: (0, 0)),
+            pl.BlockSpec((c, 1), lambda ic: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, d_pad), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((c, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, 128), jnp.float32),
+            pltpu.VMEM((c, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, scales, w2)
+    return d_out[0], err[0, 0], sqn[:, 0]

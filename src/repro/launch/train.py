@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import (
+    CompressionSpec,
     ExecutionSpec,
     ExperimentSpec,
     FaultSpec,
@@ -126,6 +127,19 @@ def make_parser() -> argparse.ArgumentParser:
         "lives in the scan carry)",
     )
     ap.add_argument(
+        "--delta-dtype", default="", choices=["", "int8", "fp8"],
+        help="quantize client deltas to this width inside the traced round "
+        "(CompressionSpec.delta_dtype): the (C, D) stacked buffer lives in "
+        "HBM at quantized width with per-(slot, block) fp32 scales and a "
+        "server-side error-feedback residual in the carry.  Requires "
+        "--compiled (the residual lives in the scan carry)",
+    )
+    ap.add_argument(
+        "--no-error-feedback", action="store_true",
+        help="with --delta-dtype: drop the error-feedback residual "
+        "(ablation — quantization error then accumulates round over round)",
+    )
+    ap.add_argument(
         "--spec", default="",
         help="load the experiment from an ExperimentSpec JSON file (as "
         "emitted by --dump-spec); the experiment flags above are ignored",
@@ -181,6 +195,10 @@ def build_spec_from_args(args) -> ExperimentSpec:
         ),
         fault=(
             FaultSpec(**json.loads(args.faults)) if args.faults else FaultSpec()
+        ),
+        compression=CompressionSpec(
+            delta_dtype=args.delta_dtype or None,
+            error_feedback=not args.no_error_feedback,
         ),
     )
 
@@ -277,6 +295,12 @@ def run_spec(spec: ExperimentSpec, *, ckpt: str = "", resume: bool = False) -> N
             "fault injection (FaultSpec enabled) requires --compiled: the "
             "fault state (availability chain, stale-delta buffer) lives in "
             "the scan carry, which the per-round host loop does not thread"
+        )
+    if rspec.compression is not None:
+        raise SystemExit(
+            "delta compression (--delta-dtype) requires --compiled: the "
+            "error-feedback residual lives in the scan carry, which the "
+            "per-round host loop does not thread"
         )
     round_step = jax.jit(build_round_step(cfg, rspec), donate_argnums=(0,))
 

@@ -42,16 +42,20 @@ def test_cohort_width_entry_points_exported():
 
     for pkg, names in (
         (core, ("aggregate_and_error", "aggregate_and_error_cohort",
-                "assert_serializable_state", "sampler_names")),
+                "aggregate_compressed", "assert_serializable_state",
+                "sampler_names")),
         (fed, ("RoundSpec", "build_fed_scan", "build_fed_scan_segment",
                "build_round_step", "build_segment_runner", "run_segmented",
                "TrainState", "round_body_for_lint", "scan_body_for_lint")),
-        (kernels, ("fused_multi_weighted_agg", "fused_cohort_agg_and_error")),
+        (kernels, ("fused_multi_weighted_agg", "fused_cohort_agg_and_error",
+                   "fused_dequant_cohort_agg", "quantize_stacked",
+                   "dequantize_stacked")),
         (checkpoint, ("save_checkpoint", "restore_checkpoint",
                       "CheckpointManager", "config_fingerprint")),
         (api, ("ExperimentSpec", "TaskSpec", "SamplerSpec", "FederationSpec",
-               "ExecutionSpec", "run", "build", "restore_template",
-               "register_task", "register_dataset", "lint")),
+               "ExecutionSpec", "CompressionSpec", "run", "build",
+               "restore_template", "register_task", "register_dataset",
+               "lint")),
         (analysis, ("analyze_hlo", "dtype_bytes", "UnknownDtypeError",
                     "Finding", "LintReport", "audit_width", "audit_width_hlo",
                     "audit_scan_safety", "audit_dtypes", "audit_compile_once",
@@ -73,6 +77,8 @@ def test_cohort_width_entry_points_exported():
     # the module itself through importlib
     fwa_mod = importlib.import_module("repro.kernels.fused_weighted_agg")
     assert "fused_cohort_agg_and_error" in fwa_mod.__all__
+    assert "fused_dequant_cohort_agg" in fwa_mod.__all__
+    assert "quantize_stacked" in fwa_mod.__all__
     mgr_mod = importlib.import_module("repro.checkpoint.manager")
     assert "CheckpointManager" in mgr_mod.__all__ and "config_fingerprint" in mgr_mod.__all__
     assert "assert_serializable_state" in samplers.__all__
