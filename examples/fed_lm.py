@@ -71,6 +71,122 @@ api.register_task("zoo_reduced_lm", zoo_lm_task)
 api.register_task("smollm_reduced_lm", lambda vocab: zoo_lm_task(vocab, "smollm"))
 
 
+def run_serve_demo(args) -> None:
+    """The closed train-to-serve loop, one process: a compiled zoo training
+    run publishes every checkpoint boundary (the ``run_segmented`` publish
+    hook) from a background thread while the main thread serves traffic
+    from the same directory — watcher, promotion gate, hot swaps and all.
+
+        PYTHONPATH=src python examples/fed_lm.py --serve --rounds 6 \
+            --clients 8 --budget 3
+
+    The two sides share nothing but the checkpoint directory (and the spec
+    that fingerprints it): the trainer could equally be a separate process
+    (``launch.train`` + ``launch.serve --follow``)."""
+    import tempfile
+    import threading
+
+    import jax
+
+    from repro.checkpoint import CheckpointManager, config_fingerprint
+    from repro.serve import (
+        CheckpointWatcher,
+        PromotionGate,
+        ServeEngine,
+        ServeSession,
+        heldout_batches,
+    )
+
+    arch_name, overrides = ZOO_ARCHS[args.archs[0]]
+    sampler = args.samplers[0]
+    spec = api.ExperimentSpec(
+        task=api.TaskSpec(
+            kind="zoo",
+            name=arch_name,
+            reduced=True,
+            kwargs=dict(vocab=args.vocab, **overrides),
+            dataset="synthetic_tokens",
+            dataset_kwargs=dict(
+                n_clients=args.clients, seq_len=args.seq, vocab=args.vocab,
+                total_seqs=60 * args.clients, power=2.2, seed=0,
+            ),
+        ),
+        sampler=api.SamplerSpec(
+            name=sampler,
+            kwargs={"horizon": args.rounds} if sampler in ("kvib", "vrb") else {},
+        ),
+        federation=api.FederationSpec(
+            rounds=args.rounds, budget=args.budget, local_steps=1,
+            batch_size=8, local_lr=0.1,
+        ),
+        execution=api.ExecutionSpec(seed=0, compiled=True, ckpt_every=2),
+        serve=api.ServeSpec(batch=2, prompt_len=16, max_tokens=48, eval_batches=2),
+    )
+    built = api.build(spec)
+    cfg, srv = built.arch_config, spec.serve
+
+    with tempfile.TemporaryDirectory(prefix="fed_lm_serve_") as ckpt_dir:
+        manager = CheckpointManager(
+            ckpt_dir, fingerprint=config_fingerprint(spec.to_dict())
+        )
+
+        def publish(state, step):
+            print(f"[train] committed boundary step {step}", flush=True)
+
+        trainer = threading.Thread(
+            target=api.run,
+            args=(spec,),
+            kwargs=dict(ckpt_manager=manager, built=built, publish=publish),
+            daemon=True,
+        )
+
+        template = api.restore_template(spec, built=built)
+        engine = ServeEngine(
+            cfg, template.params,
+            batch=srv.batch, max_seq=srv.max_seq, page_size=srv.page_size,
+            temperature=srv.temperature, seed=1,
+        )
+        gate = PromotionGate(
+            cfg,
+            heldout_batches(
+                built.dataset,
+                n_batches=srv.eval_batches,
+                batch_size=spec.federation.batch_size,
+                seed=0,
+            ),
+            tolerance=srv.tolerance,
+        )
+        watcher = CheckpointWatcher(manager, template)
+        traffic = [jax.random.fold_in(jax.random.PRNGKey(0), 11)]
+
+        def prompt_fn():
+            traffic[0], sub = jax.random.split(traffic[0])
+            return jax.random.randint(sub, (srv.batch, srv.prompt_len), 0, cfg.vocab)
+
+        def on_decision(cand, promoted):
+            print(
+                f"[serve] step {cand.step}: "
+                f"{'PROMOTE' if promoted else 'ROLLBACK'} "
+                f"({gate.log.records[-1].reason})",
+                flush=True,
+            )
+
+        print(f"[serve] gate bar (round-0 init) = {gate.prime(engine.params):.4f}")
+        trainer.start()
+        session = ServeSession(
+            engine, watcher, gate,
+            prompt_fn=prompt_fn,
+            decode_steps_per_poll=srv.decode_steps_per_poll,
+            final_step=args.rounds,
+            on_decision=on_decision,
+        )
+        summary = session.run(timeout=600.0)
+        trainer.join()
+    assert engine.decode_cache_entries() == 1, "decode recompiled under swaps"
+    print(gate.log.render())
+    print(summary.render(), flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=50)
@@ -79,6 +195,13 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--vocab", type=int, default=256)
     ap.add_argument("--model", choices=["tiny", "zoo"], default="tiny")
+    ap.add_argument(
+        "--serve", action="store_true",
+        help="run the closed train-to-serve loop instead of the sampler "
+        "sweep: compiled training (first of --samplers, first of --archs) "
+        "publishes checkpoint boundaries while a serving engine hot-swaps "
+        "the promoted ones (use a small --rounds, e.g. 6)",
+    )
     ap.add_argument(
         "--archs",
         nargs="+",
@@ -89,6 +212,10 @@ def main() -> None:
     ap.add_argument("--samplers", nargs="+", default=["uniform_isp", "vrb", "avare", "kvib"])
     ap.add_argument("--out", default="results/fed_lm.json")
     args = ap.parse_args()
+
+    if args.serve:
+        run_serve_demo(args)
+        return
 
     # tiny runs one model; zoo fans each sampler out over the reduced
     # architecture families (result keys become "<sampler>/<arch>").

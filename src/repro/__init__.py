@@ -16,6 +16,9 @@ _API_EXPORTS = (
     "SamplerSpec",
     "FederationSpec",
     "ExecutionSpec",
+    "FaultSpec",
+    "CompressionSpec",
+    "ServeSpec",
     "BuiltExperiment",
     "build",
     "run",

@@ -976,6 +976,39 @@ def run_suite(
     return report
 
 
+def _lint_serve_cell(*, fast: bool = False) -> tuple[list, list]:
+    """The serve cell: the decode entry point under continuous weight swaps.
+
+    ``audit_dtypes`` walks the decode step's jaxpr on the engine's pinned
+    avals (paged caches, traced position/key/temperature); ``audit_compile_
+    once`` drives ``ServeEngine.compile_once_probe`` — the decode step with
+    a DIFFERENT weight variant installed on every call, i.e. >= 2 hot swaps
+    across the audit's segments plus its numpy-round-trip resume — and
+    requires the jit cache to grow by exactly one."""
+    from repro.configs import get_config
+    from repro.models import transformer
+    from repro.serve import ServeEngine
+
+    cfg = get_config("smollm-360m").reduced(
+        n_layers=2, d_model=64, d_ff=128, vocab=64
+    )
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    params = transformer.init_params(cfg, k1)
+    variant = transformer.init_params(cfg, k2)
+    engine = ServeEngine(cfg, params, batch=2, max_seq=32, page_size=8)
+
+    findings = list(audit_dtypes(engine.decode_jaxpr(), target="decode step"))
+    checked = ["decode step: dtype"]
+    if not fast:
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+        probe, state = engine.compile_once_probe(prompts, [params, variant])
+        findings += audit_compile_once(
+            probe, state, 2, target="decode step under weight swaps"
+        )
+        checked.append("decode step: compile_once across 2 weight swaps")
+    return findings, checked
+
+
 # ---------------------------------------------------------------------------
 # The sweep: registry x metric fidelity x execution mode
 # ---------------------------------------------------------------------------
@@ -1090,6 +1123,24 @@ def sweep_registry(
                     checked=[f"{cell}: {c}" for c in sub.checked],
                 )
                 report.extend(prefixed)
+
+    # One serve cell alongside the sampler matrix: the train-to-serve decode
+    # step (repro.serve.ServeEngine) must satisfy the same dtype and
+    # compile-once contracts as the training segment — including across
+    # weight hot-swaps, the serving analogue of segment boundaries.
+    cell = "serve x paged-decode x swaps"
+    if progress is not None:
+        progress(cell)
+    findings, checked = _lint_serve_cell(fast=fast)
+    report.extend(
+        LintReport(
+            findings=[
+                dataclasses.replace(f, target=f"{cell}: {f.target}")
+                for f in findings
+            ],
+            checked=[f"{cell}: {c}" for c in checked],
+        )
+    )
     return report
 
 

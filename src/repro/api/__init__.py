@@ -38,6 +38,7 @@ from repro.api.spec import (
     FaultSpec,
     FederationSpec,
     SamplerSpec,
+    ServeSpec,
     TaskSpec,
     dataset_names,
     register_dataset,
@@ -54,6 +55,7 @@ __all__ = [
     "ExecutionSpec",
     "FaultSpec",
     "CompressionSpec",
+    "ServeSpec",
     "BuiltExperiment",
     "build",
     "run",

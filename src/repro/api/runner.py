@@ -197,13 +197,14 @@ def _specs_compatible(a: ExperimentSpec, b: ExperimentSpec) -> bool:
     if fa.cohort is None or fb.cohort is None:
         fa = dataclasses.replace(fa, cohort=None)
         fb = dataclasses.replace(fb, cohort=None)
-    return (a.task, a.sampler, fa, a.execution, a.fault, a.compression) == (
+    return (a.task, a.sampler, fa, a.execution, a.fault, a.compression, a.serve) == (
         b.task,
         b.sampler,
         fb,
         b.execution,
         b.fault,
         b.compression,
+        b.serve,
     )
 
 
@@ -237,7 +238,7 @@ def _zoo_segment_and_state(built: BuiltExperiment):
     return segment, state
 
 
-def _run_zoo(built: BuiltExperiment, ckpt_manager) -> History:
+def _run_zoo(built: BuiltExperiment, ckpt_manager, publish=None) -> History:
     from repro.fed.state import run_segmented
 
     spec = built.spec
@@ -257,6 +258,7 @@ def _run_zoo(built: BuiltExperiment, ckpt_manager) -> History:
         segment,
         ckpt_every=ckpt_every,
         manager=ckpt_manager,
+        publish=publish,
     )
     jax.block_until_ready(state)
 
@@ -295,6 +297,7 @@ def run(
     eval_data: tuple | None = None,
     ckpt_manager=None,
     built: BuiltExperiment | None = None,
+    publish=None,
 ) -> History:
     """Execute a spec end to end; the one front door for both stacks.
 
@@ -305,7 +308,10 @@ def run(
     ``execution.ckpt_every`` segment boundary.  Its fingerprint should be
     ``config_fingerprint(spec.to_dict())``.
     ``built`` — a prior ``build(spec)`` result to reuse (must be from an
-    equal spec)."""
+    equal spec).
+    ``publish`` — ``(state, rounds_done)`` callback fired after each
+    boundary's manifest commit (zoo stack; needs ``ckpt_manager``): the
+    train side of the ``repro.serve`` hand-off."""
     if built is None:
         built = build(spec)
     elif not _specs_compatible(built.spec, spec):
@@ -321,7 +327,12 @@ def run(
                 "(kind='task'); the zoo stack's metrics are train loss / "
                 "cohort size / drops"
             )
-        return _run_zoo(built, ckpt_manager)
+        return _run_zoo(built, ckpt_manager, publish)
+    if publish is not None:
+        raise ValueError(
+            "run(spec, publish=...) is a zoo-stack feature (kind='zoo'): "
+            "the serve hand-off follows the segmented TrainState manager"
+        )
     return run_federated(
         built.task,
         built.dataset,

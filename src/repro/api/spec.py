@@ -50,6 +50,7 @@ __all__ = [
     "ExecutionSpec",
     "FaultSpec",
     "CompressionSpec",
+    "ServeSpec",
     "ExperimentSpec",
     "register_task",
     "register_dataset",
@@ -494,6 +495,68 @@ class CompressionSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """The serving-side geometry and policy (``repro.serve``).
+
+    Like every spec section this is part of the run's identity: the config
+    fingerprint covers it, so a server following a checkpoint directory
+    (``launch.serve --follow``) provably agrees with the trainer about how
+    the model is served, not just how it was trained.  Old spec JSONs
+    without a ``serve`` section deserialize to these defaults.
+
+    batch / prompt_len / max_tokens:
+        Lockstep decode geometry: ``batch`` concurrent sequences, each
+        prefilled from a ``prompt_len``-token prompt and decoded for up to
+        ``max_tokens`` new tokens before the batch is refilled (the paged
+        cache is allocated for ``prompt_len + max_tokens`` positions).
+    page_size:
+        KV-cache page width (``models.attention.init_paged_kv_cache``).
+    temperature:
+        Sampling temperature; 0 = greedy.  Traced data in the decode step —
+        changing it never recompiles.
+    decode_steps_per_poll:
+        Decode chunk length between manifest polls in the serving loop —
+        the swap-latency vs. throughput knob.
+    eval_batches / tolerance:
+        Promotion gate: number of fixed held-out batches scored per
+        candidate boundary (batch size follows
+        ``FederationSpec.batch_size``, mirroring the simulation stack's
+        ``eval_batches`` convention) and the promote slack
+        (``loss <= best + tolerance``).
+    """
+
+    batch: int = 2
+    prompt_len: int = 16
+    max_tokens: int = 48
+    page_size: int = 16
+    temperature: float = 0.0
+    decode_steps_per_poll: int = 16
+    eval_batches: int = 4
+    tolerance: float = 0.0
+
+    def __post_init__(self):
+        for field in ("batch", "prompt_len", "max_tokens", "page_size",
+                      "decode_steps_per_poll", "eval_batches"):
+            if int(getattr(self, field)) < 1:
+                raise ValueError(
+                    f"ServeSpec.{field} must be >= 1, got {getattr(self, field)}"
+                )
+        if float(self.temperature) < 0.0:
+            raise ValueError(
+                f"ServeSpec.temperature must be >= 0, got {self.temperature}"
+            )
+        if float(self.tolerance) < 0.0:
+            raise ValueError(
+                f"ServeSpec.tolerance must be >= 0, got {self.tolerance}"
+            )
+
+    @property
+    def max_seq(self) -> int:
+        """The paged cache's static capacity per sequence."""
+        return int(self.prompt_len) + int(self.max_tokens)
+
+
+@dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
     """The canonical, serializable description of one experiment.
 
@@ -506,6 +569,7 @@ class ExperimentSpec:
     execution: ExecutionSpec = dataclasses.field(default_factory=ExecutionSpec)
     fault: FaultSpec = dataclasses.field(default_factory=FaultSpec)
     compression: CompressionSpec = dataclasses.field(default_factory=CompressionSpec)
+    serve: ServeSpec = dataclasses.field(default_factory=ServeSpec)
 
     # -- serialization -------------------------------------------------------
     def to_dict(self) -> dict:
@@ -518,6 +582,7 @@ class ExperimentSpec:
                 "execution": dataclasses.asdict(self.execution),
                 "fault": dataclasses.asdict(self.fault),
                 "compression": dataclasses.asdict(self.compression),
+                "serve": dataclasses.asdict(self.serve),
             }
         )
 
@@ -535,6 +600,7 @@ class ExperimentSpec:
             "execution": ExecutionSpec,
             "fault": FaultSpec,
             "compression": CompressionSpec,
+            "serve": ServeSpec,
         }
         unknown = sorted(set(data) - set(sections))
         if unknown:

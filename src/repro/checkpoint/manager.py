@@ -24,6 +24,7 @@ import hashlib
 import json
 import os
 import platform
+import time
 from typing import Any
 
 import jax
@@ -176,6 +177,45 @@ class CheckpointManager:
             if os.path.exists(self.checkpoint_path(step)):
                 return int(step)
         return None
+
+    def wait_for_next(
+        self,
+        after_step: int,
+        timeout: float,
+        *,
+        poll_interval: float = 0.05,
+    ) -> int | None:
+        """Block until a step > ``after_step`` is committed; return it.
+
+        The read side of the hand-off contract for a *concurrently writing*
+        manager (a training process publishing boundaries while a serving
+        process follows — ``repro.serve.CheckpointWatcher``):
+
+        * Readers can never observe a partially written step.  ``save``
+          writes the checkpoint files first and the manifest last, and the
+          manifest lands via tmp-file + ``os.replace`` — POSIX-atomic, so a
+          concurrent ``read_manifest`` sees either the previous complete
+          manifest or the new complete one, never a torn JSON, and any step
+          the manifest references already has its files fully on disk.
+        * ``latest()`` additionally requires the step's ``.npz`` to exist,
+          so a retention race (the writer deleting a stale step between the
+          manifest read and the file check) degrades to the next-newest
+          retained step, never to a dangling reference.
+
+        Polls ``latest()`` every ``poll_interval`` seconds; returns the
+        newest committed step ``> after_step`` as soon as one is visible, or
+        ``None`` once ``timeout`` seconds elapse without one.  ``timeout=0``
+        is a single non-blocking check."""
+        after = int(after_step)
+        deadline = time.monotonic() + float(timeout)
+        while True:
+            step = self.latest()
+            if step is not None and step > after:
+                return int(step)
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                return None
+            time.sleep(min(float(poll_interval), remaining))
 
     def restore(self, template, step: int | None = None):
         """Restore step ``step`` (default: ``latest()``) into ``template``.

@@ -322,6 +322,7 @@ def run_segmented(
     manager=None,
     on_segment: Callable[[TrainState, int], None] | None = None,
     max_segments: int | None = None,
+    publish: Callable[[TrainState, int], None] | None = None,
 ) -> TrainState:
     """Host-driven loop over jitted scan segments of ``ckpt_every`` rounds.
 
@@ -333,14 +334,28 @@ def run_segmented(
 
     After each segment, in order: ``manager.save(state, step=rounds_done)``
     publishes a checkpoint (atomic npz + manifest — the manifest write is the
-    commit point), then ``on_segment(state, rounds_done)`` runs (progress
+    commit point), then ``publish(state, rounds_done)`` announces the
+    boundary, then ``on_segment(state, rounds_done)`` runs (progress
     printing, cooperative-preemption hooks).  ``max_segments`` stops the loop
     early after that many segments — cooperative preemption for time-limited
     schedulers, and what the resume tests use to simulate a mid-horizon kill.
 
+    ``publish`` is the train side of the train-to-serve loop
+    (``repro.serve``): because it fires strictly AFTER the manifest commit,
+    a serving process notified at (or polling around) that moment is
+    guaranteed to observe the step via ``CheckpointManager.wait_for_next`` —
+    the hook requires ``manager`` (without one there is no committed
+    artifact to announce).
+
     Returns the final (or preempted) state; ``int(state.round)`` tells the
     caller how far it got.
     """
+    if publish is not None and manager is None:
+        raise ValueError(
+            "run_segmented(publish=...) requires a manager: the publish hook "
+            "announces COMMITTED checkpoint boundaries, and only the "
+            "manager's manifest write commits one"
+        )
     done = int(state.round)
     if done > total_rounds:
         raise ValueError(
@@ -354,6 +369,8 @@ def run_segmented(
         done += n
         if manager is not None:
             manager.save(state, step=done)
+            if publish is not None:
+                publish(state, done)
         if on_segment is not None:
             on_segment(state, done)
         n_segments += 1

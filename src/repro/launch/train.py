@@ -242,6 +242,12 @@ def run_spec(spec: ExperimentSpec, *, ckpt: str = "", resume: bool = False) -> N
             # changed spec field raises instead of silently mixing runs.
             fingerprint = config_fingerprint(spec.to_dict())
             manager = CheckpointManager(f"{ckpt}_ckpts", fingerprint=fingerprint)
+            # Drop the spec next to the manifest BEFORE training: a serving
+            # process following this directory (repro.launch.serve --follow)
+            # reconstructs the full run configuration — and the matching
+            # fingerprint — from this file alone.
+            os.makedirs(manager.directory, exist_ok=True)
+            spec.save(os.path.join(manager.directory, "spec.json"))
             if resume:
                 state, start = manager.restore_or_init(state)
                 if start:

@@ -7,6 +7,14 @@ Layout conventions:
   q              (B, S, KV, G, hd)   G = n_heads / n_kv_heads
   k, v           (B, S, KV, hd)
   decode cache   {"k": (B, S_max, KV, hd), "v": ..., "idx": ()}
+  paged cache    {"pool_k": (B*P, page, KV, hd), "pool_v": ...,
+                  "page_table": (B, P) int32}
+
+The paged layout is the serving substrate (``repro.serve``): the KV pool is
+one preallocated static-shape buffer, sequences address it through an int32
+page table, and a single-token decode writes exactly one (page, slot) line —
+so the decode program's avals never depend on how long a sequence has grown
+and the jit cache stays at one entry for the server's whole lifetime.
 """
 from __future__ import annotations
 
@@ -22,6 +30,9 @@ __all__ = [
     "cross_attention",
     "init_kv_cache",
     "decode_attention",
+    "init_paged_kv_cache",
+    "pack_kv_to_pages",
+    "paged_decode_attention",
 ]
 
 _NEG = -2.3819763e38  # bf16-safe -inf surrogate
@@ -208,3 +219,109 @@ def decode_attention(
     out = _sdpa(cfg, q, k, v, mask)
     out = out.reshape(b, 1, cfg.n_heads * cfg.hd)
     return out @ params["wo"], {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# paged decode cache (the serving layout)
+# ---------------------------------------------------------------------------
+
+
+def _pages_per_seq(max_seq: int, page_size: int) -> int:
+    return -(-int(max_seq) // int(page_size))
+
+
+def init_paged_kv_cache(
+    cfg: ArchConfig, batch: int, max_seq: int, page_size: int, dtype=None
+) -> dict:
+    """Preallocated paged KV cache: a (B*P, page, KV, hd) pool plus a
+    (B, P) int32 page table mapping each sequence's logical pages onto pool
+    rows.  The identity table assigns every sequence a contiguous stripe;
+    the indirection is what a production server remaps for prefix sharing /
+    admission — the decode program below only ever sees the table."""
+    dtype = dtype or cfg.param_dtype
+    pages = _pages_per_seq(max_seq, page_size)
+    pool = (batch * pages, int(page_size), cfg.n_kv_heads, cfg.hd)
+    table = jnp.arange(batch * pages, dtype=jnp.int32).reshape(batch, pages)
+    return {
+        "pool_k": jnp.zeros(pool, dtype),
+        "pool_v": jnp.zeros(pool, dtype),
+        "page_table": table,
+    }
+
+
+def pack_kv_to_pages(cache: dict, page_size: int) -> dict:
+    """Repack a dense prefill cache ``{"k","v"}: (B, S_max, KV, hd)`` into the
+    paged layout (identity page table).  This is the prefill->decode hand-off:
+    prefill writes the cheap contiguous layout, one reshape moves it into the
+    pool the decode step indexes through the table."""
+    k, v = cache["k"], cache["v"]
+    b, s_max, kv, hd = k.shape
+    pages = _pages_per_seq(s_max, page_size)
+    pad = pages * int(page_size) - s_max
+    if pad:
+        k = jnp.pad(k, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        v = jnp.pad(v, [(0, 0), (0, pad), (0, 0), (0, 0)])
+    table = jnp.arange(b * pages, dtype=jnp.int32).reshape(b, pages)
+    return {
+        "pool_k": k.reshape(b * pages, int(page_size), kv, hd),
+        "pool_v": v.reshape(b * pages, int(page_size), kv, hd),
+        "page_table": table,
+    }
+
+
+def paged_decode_attention(
+    params,
+    cfg: ArchConfig,
+    x: jax.Array,
+    cache: dict,
+    index: jax.Array,
+    *,
+    window: int | None = None,
+) -> tuple[jax.Array, dict]:
+    """Single-token decode against the paged cache (lockstep batch: every
+    sequence writes position ``index``).
+
+    The new K/V line lands in exactly one (page, slot) per sequence: the
+    physical page comes from one dynamic row of the page table, the write is
+    a (B,)-scatter into the pool — O(B * KV * hd) bytes touched regardless of
+    context length, versus the dense path's full-cache ``dynamic_update_slice``
+    copy when the carry is not donated.  Attention then gathers the table's
+    view of the pool back to (B, P*page, KV, hd) and reuses the masked SDPA
+    (positions past ``index`` — including the padded tail of the last page —
+    are masked, so pool garbage never contributes)."""
+    b, _one, _ = x.shape
+    pool_k, pool_v, table = cache["pool_k"], cache["pool_v"], cache["page_table"]
+    page_size = pool_k.shape[1]
+
+    q, k_new, v_new = _project_qkv(params, cfg, x, x)
+    cos, sin = rope_angles(index[None], cfg.hd, cfg.rope_theta)  # (1, hd/2)
+    q = apply_rope(q, cos[None, :, None, None, :], sin[None, :, None, None, :])
+    k_new = apply_rope(k_new, cos[None, :, None, :], sin[None, :, None, :])
+
+    # index is traced: page/slot stay inside the jitted program (no host sync,
+    # no shape dependence on sequence length — the compile-once contract).
+    page = index // page_size
+    slot = index % page_size
+    phys = jax.lax.dynamic_index_in_dim(table, page, axis=1, keepdims=False)  # (B,)
+    pool_k = pool_k.at[phys, slot].set(k_new[:, 0].astype(pool_k.dtype))
+    pool_v = pool_v.at[phys, slot].set(v_new[:, 0].astype(pool_v.dtype))
+
+    # (B, P, page, KV, hd) -> (B, P*page, KV, hd): the table's sequence view.
+    pages = table.shape[1]
+    k = pool_k[table].reshape(b, pages * page_size, *pool_k.shape[2:])
+    v = pool_v[table].reshape(b, pages * page_size, *pool_v.shape[2:])
+    k = shard(k, "batch", "kv_seq", None, None)
+    v = shard(v, "batch", "kv_seq", None, None)
+
+    kpos = jnp.arange(pages * page_size)
+    valid = kpos <= index
+    if window is not None:
+        valid = jnp.logical_and(valid, kpos > index - window)
+    mask = valid[None, None, None, None, :]
+    out = _sdpa(cfg, q, k, v, mask)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.hd)
+    return out @ params["wo"], {
+        "pool_k": pool_k,
+        "pool_v": pool_v,
+        "page_table": table,
+    }

@@ -178,7 +178,7 @@ def _apply_block(
     if kind in ("attn", "attn_local", "moe"):
         x = rms_norm(h, p["ln1"], cfg.norm_eps)
         if mode == "decode":
-            y, cache = decode_attention(p["attn"], cfg, x, cache, index, window=window)
+            y, cache = _decode_attn(p["attn"], cfg, x, cache, index, window=window)
         else:
             y, kv = _full_attention(
                 p["attn"], cfg, x, window=window,
@@ -248,7 +248,7 @@ def _apply_block(
     if kind == "dec":
         x = rms_norm(h, p["ln1"], cfg.norm_eps)
         if mode == "decode":
-            y, self_cache = decode_attention(p["attn"], cfg, x, cache["self"], index)
+            y, self_cache = _decode_attn(p["attn"], cfg, x, cache["self"], index)
         else:
             y, self_cache = _full_attention(
                 p["attn"], cfg, x, want_cache=(mode == "prefill"), max_seq=max_seq
@@ -268,6 +268,17 @@ def _apply_block(
         return h + mlp(p["mlp"], cfg, x), new_cache, aux
 
     raise ValueError(kind)
+
+
+def _decode_attn(p, cfg, x, cache, index, *, window=None):
+    """Decode-attention dispatch on the cache layout: a paged cache (the
+    ``repro.serve`` engine's preallocated pool + page table) routes to
+    ``paged_decode_attention``, the dense layout to ``decode_attention``.
+    The layout is a property of the cache pytree, so the same jitted
+    ``decode_step`` program serves both — treedef in, treedef out."""
+    if isinstance(cache, dict) and "page_table" in cache:
+        return attn_mod.paged_decode_attention(p, cfg, x, cache, index, window=window)
+    return decode_attention(p, cfg, x, cache, index, window=window)
 
 
 def _full_attention(p, cfg, x, *, causal=True, window=None, want_cache=False, max_seq=None):
@@ -430,13 +441,23 @@ def loss_fn(params, cfg: ArchConfig, batch) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def init_caches(cfg: ArchConfig, batch: int, max_seq: int):
-    """Abstract cache structure (stacked over pattern repeats) for decode."""
+def init_caches(cfg: ArchConfig, batch: int, max_seq: int, page_size: int | None = None):
+    """Abstract cache structure (stacked over pattern repeats) for decode.
+
+    ``page_size`` switches self-attention caches to the paged layout
+    (``attention.init_paged_kv_cache`` — the serving substrate); recurrent
+    states (mamba2/mlstm/slstm) and the fixed-width cross caches are O(1) in
+    sequence length and have nothing to page."""
     reps = cfg.pattern_repeats()
+
+    def kv_cache():
+        if page_size is not None:
+            return attn_mod.init_paged_kv_cache(cfg, batch, max_seq, page_size)
+        return attn_mod.init_kv_cache(cfg, batch, max_seq)
 
     def one(kind):
         if kind in ("attn", "attn_local", "moe", "shared_attn"):
-            return attn_mod.init_kv_cache(cfg, batch, max_seq)
+            return kv_cache()
         if kind == "mamba2":
             return ssm_mod.init_mamba2_state(cfg, batch)
         if kind == "mlstm":
@@ -450,7 +471,7 @@ def init_caches(cfg: ArchConfig, batch: int, max_seq: int):
             }
         if kind == "dec":
             return {
-                "self": attn_mod.init_kv_cache(cfg, batch, max_seq),
+                "self": kv_cache(),
                 "cross": {
                     "k": jnp.zeros(
                         (batch, cfg.frontend_seq, cfg.n_kv_heads, cfg.hd), cfg.param_dtype
@@ -468,10 +489,22 @@ def init_caches(cfg: ArchConfig, batch: int, max_seq: int):
     ]
 
 
-def prefill(params, cfg: ArchConfig, tokens: jax.Array, aux_embeds=None, max_seq=None):
+def prefill(
+    params,
+    cfg: ArchConfig,
+    tokens: jax.Array,
+    aux_embeds=None,
+    max_seq=None,
+    page_size: int | None = None,
+):
     """Process the prompt, return (logits, caches).  Attention caches are
     padded to ``max_seq`` (defaults to the prompt length) so subsequent
-    ``decode_step`` calls can append in place."""
+    ``decode_step`` calls can append in place.
+
+    ``page_size`` repacks the attention caches into the paged decode layout
+    (``attention.pack_kv_to_pages``) before returning: prefill computes in
+    the cheap contiguous layout, decode indexes through the page table — the
+    prefill->decode hand-off of the serving engine."""
     h = params["embed"][tokens]
     if cfg.scale_embed:
         h = h * jnp.asarray(cfg.d_model**0.5, h.dtype)
@@ -483,7 +516,27 @@ def prefill(params, cfg: ArchConfig, tokens: jax.Array, aux_embeds=None, max_seq
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
     head = params.get("lm_head", params["embed"].T)
     logits = softcap(h[:, -1:] @ head, cfg.final_softcap)
+    if page_size is not None:
+        caches = _caches_to_pages(cfg, caches, page_size)
     return logits, caches
+
+
+def _caches_to_pages(cfg: ArchConfig, caches, page_size: int):
+    """Repack every self-attention slot cache (stacked over pattern repeats)
+    into the paged layout; recurrent and cross caches pass through."""
+
+    def pack(cache):  # vmapped over the leading repeats axis
+        return jax.vmap(lambda c: attn_mod.pack_kv_to_pages(c, page_size))(cache)
+
+    out = []
+    for kind, cache in zip(cfg.block_pattern, caches):
+        if kind in ("attn", "attn_local", "moe", "shared_attn"):
+            out.append(pack(cache))
+        elif kind == "dec":
+            out.append({"self": pack(cache["self"]), "cross": cache["cross"]})
+        else:
+            out.append(cache)
+    return out
 
 
 def decode_step(params, cfg: ArchConfig, token: jax.Array, caches, index: jax.Array):

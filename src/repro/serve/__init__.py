@@ -1,0 +1,70 @@
+"""repro.serve: the train-to-serve subsystem.
+
+Turns the segmented trainer's checkpoint boundaries into a live serving
+loop: a paged-KV-cache decode engine (``engine``), a manifest-following
+checkpoint watcher (``swap``), an eval-gated promote/rollback decision
+per boundary (``gate``), and the loop composing them under traffic
+(``session``).  Front doors: ``repro.launch.serve --follow CKPT_DIR``
+(separate process) and ``examples/fed_lm.py --serve`` (in-process
+closed loop).
+
+The hand-off contract (what the manifest promises a reader)
+-----------------------------------------------------------
+
+The training process (``fed.state.run_segmented`` + ``CheckpointManager``)
+and the serving process share nothing but a directory.  The manifest
+(``manifest.json``) is the entire coordination protocol:
+
+1. **Commit point.**  A step exists iff the manifest references it.  The
+   manager writes checkpoint files first and the manifest last (tmp +
+   ``os.replace``), so a reader can never observe a partially written
+   step: whatever ``latest()`` / ``wait_for_next()`` returns is fully on
+   disk.  (A torn ``.npz`` may exist after a crash — but it is never
+   *referenced*.)
+2. **Fingerprint match.**  The manifest records
+   ``config_fingerprint(spec.to_dict())``; the watcher's manager carries
+   the serving process's own fingerprint and ``restore`` refuses a
+   mismatch — train and serve provably agree on the full
+   ``ExperimentSpec`` (``launch.train`` drops ``spec.json`` next to the
+   manifest so the server can reconstruct it).
+3. **Treedef check.**  ``restore`` validates the manifest's treedef hash
+   against the serving process's restore template
+   (``api.restore_template(spec)``), so a restored candidate is
+   structurally identical to what the engine's pinned swap signature
+   expects — a payload that deserializes is a payload that swaps.
+
+The compile-once weight-swap contract
+-------------------------------------
+
+The engine's prefill and decode entry points each compile exactly once
+per engine and stay cached across every weight swap of the run:
+
+* cache pytree structure and all avals are pinned at construction
+  (static-shape paged pool + page table; position is a traced scalar);
+* ``swap_params`` validates a candidate's treedef and leaf avals against
+  the pinned signature BEFORE installing it — a structural change raises
+  instead of adding a jit cache entry;
+* sampling (temperature, PRNG key) is traced data inside the step.
+
+Enforced by ``analysis.lint.audit_compile_once`` over
+``ServeEngine.compile_once_probe`` (the decode step under cycling weight
+variants — the serve cell of ``analysis.lint.sweep_registry``) and
+benchmarked by ``benchmarks/run.py fed_serve_swap`` (swap-heavy decode
+>= 0.9x the static-server token rate).
+"""
+from repro.serve.engine import ServeEngine
+from repro.serve.gate import PromotionGate, PromotionLog, PromotionRecord, heldout_batches
+from repro.serve.session import ServeSession, ServeSummary
+from repro.serve.swap import Candidate, CheckpointWatcher
+
+__all__ = [
+    "ServeEngine",
+    "Candidate",
+    "CheckpointWatcher",
+    "PromotionGate",
+    "PromotionLog",
+    "PromotionRecord",
+    "heldout_batches",
+    "ServeSession",
+    "ServeSummary",
+]

@@ -1,0 +1,153 @@
+"""Promotion gate: held-out-loss scoring and promote/rollback per boundary.
+
+Every checkpoint boundary the watcher surfaces is scored on a fixed set of
+held-out batches before it may touch the engine: ``PromotionGate.consider``
+computes the candidate's mean eval loss with one jitted loss program
+(params are an argument, so scoring N candidates compiles once) and
+promotes iff the candidate is no worse than the best loss served so far
+(within ``tolerance``).  A rejected candidate is a *rollback*: the engine
+keeps serving the incumbent weights and the decision is recorded either
+way in the ``PromotionLog``.
+
+The held-out batches follow the eval-path convention of ``api.run``'s
+simulation stack (``FederationSpec.eval_batches`` fixed batches, scored on
+a schedule): ``heldout_batches`` draws them from the built experiment's
+``FederatedDataset`` with a dedicated eval key stream (``fold_in`` tag off
+a fresh seed key) that is disjoint by construction from the training chain
+key — the gate never scores on batches the trainer's key stream can emit.
+
+The gate is primed with the *initial* (round-0) params: the serving
+process starts on the untrained model, so the first trained boundary
+normally clears the bar — "promote when training helped" rather than
+"promote never" or "promote always".
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+
+__all__ = ["PromotionRecord", "PromotionLog", "PromotionGate", "heldout_batches"]
+
+
+def heldout_batches(dataset, *, n_batches: int, batch_size: int, seed: int = 0):
+    """``n_batches`` fixed (tokens, targets) eval batches from ``dataset``.
+
+    Clients and within-client rows are drawn from an eval-only key stream
+    (``fold_in(PRNGKey(seed), 7)``); the batches are materialized once and
+    reused for every candidate, so gate decisions are comparable across the
+    whole run."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), 7)
+    out = []
+    for _ in range(int(n_batches)):
+        key, k_client, k_rows = jax.random.split(key, 3)
+        client = jax.random.randint(k_client, (), 0, dataset.n_clients)
+        out.append(dataset.client_batch(client, k_rows, int(batch_size)))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class PromotionRecord:
+    """One gate decision: the candidate's step/loss vs. the incumbent."""
+
+    step: int
+    loss: float
+    best_loss: float  # best served loss BEFORE this decision
+    promoted: bool
+
+    @property
+    def reason(self) -> str:
+        rel = "<=" if self.promoted else ">"
+        return f"loss {self.loss:.4f} {rel} best {self.best_loss:.4f}"
+
+
+class PromotionLog:
+    """Append-only record of every promote/rollback decision."""
+
+    def __init__(self):
+        self.records: list[PromotionRecord] = []
+
+    def append(self, record: PromotionRecord) -> None:
+        self.records.append(record)
+
+    @property
+    def promotions(self) -> int:
+        return sum(r.promoted for r in self.records)
+
+    @property
+    def rollbacks(self) -> int:
+        return sum(not r.promoted for r in self.records)
+
+    def render(self) -> str:
+        lines = [
+            f"step {r.step:>4} {'PROMOTE' if r.promoted else 'ROLLBACK'} "
+            f"({r.reason})"
+            for r in self.records
+        ]
+        lines.append(
+            f"{self.promotions} promotions, {self.rollbacks} rollbacks"
+        )
+        return "\n".join(lines)
+
+
+class PromotionGate:
+    """Score candidates on held-out loss; promote iff no worse than served.
+
+    Parameters
+    ----------
+    cfg:
+        The arch config of the served model (the loss program's shape).
+    batches:
+        Fixed (tokens, targets) held-out batches (``heldout_batches``).
+    tolerance:
+        Slack on the comparison: promote when
+        ``loss <= best_loss + tolerance``.  0.0 = strictly-no-worse.
+    """
+
+    def __init__(self, cfg, batches, *, tolerance: float = 0.0):
+        if not batches:
+            raise ValueError("PromotionGate needs at least one held-out batch")
+        self.batches = [
+            (jnp.asarray(t, jnp.int32), jnp.asarray(y, jnp.int32))
+            for t, y in batches
+        ]
+        self.tolerance = float(tolerance)
+        self.best_loss: float | None = None
+        self.log = PromotionLog()
+        # Params are an ARGUMENT: one compiled loss program scores every
+        # candidate of the run (the gate-side compile-once contract).
+        self._loss = jax.jit(
+            lambda p, tokens, targets: transformer.loss_fn(p, cfg, (tokens, targets))
+        )
+
+    def score(self, params) -> float:
+        """Mean held-out loss of ``params`` over the fixed batches."""
+        total = 0.0
+        for tokens, targets in self.batches:
+            total += float(self._loss(params, tokens, targets))
+        return total / len(self.batches)
+
+    def prime(self, params) -> float:
+        """Set the bar to the currently-served params' loss (round-0 init)."""
+        self.best_loss = self.score(params)
+        return self.best_loss
+
+    def consider(self, candidate) -> bool:
+        """Gate one ``Candidate``: score, decide, record.  True = promote."""
+        loss = self.score(candidate.params)
+        prev = self.best_loss if self.best_loss is not None else float("inf")
+        promoted = loss <= prev + self.tolerance
+        self.log.append(
+            PromotionRecord(
+                step=int(candidate.step),
+                loss=loss,
+                best_loss=prev,
+                promoted=promoted,
+            )
+        )
+        if promoted:
+            self.best_loss = loss
+        return promoted

@@ -1,0 +1,89 @@
+"""Checkpoint watcher: the read side of the manifest hand-off contract.
+
+``CheckpointWatcher`` follows a ``repro.checkpoint.CheckpointManager``
+directory written by a (possibly still running) training process and turns
+newly *committed* steps into restore-validated ``Candidate``s for the
+promotion gate.  It never parses checkpoint files on its own — everything
+goes through the manager's read path, so the full contract applies:
+
+* the manifest (``manifest.json``, written via tmp + ``os.replace``) is the
+  atomic commit point: a step is visible if and only if its checkpoint
+  files were completely written first — a watcher can never observe a torn
+  step (``CheckpointManager`` module docstring);
+* ``restore`` validates the manifest's config fingerprint against the
+  watcher's manager (train and serve must agree on the spec) and the
+  treedef hash against the restore template — a candidate that deserializes
+  is structurally identical to what the engine's pinned swap signature
+  expects.
+
+The watcher is strictly monotone: each committed step is surfaced at most
+once (``seen_step`` advances on every successful ``poll``), so the serving
+loop considers every boundary exactly once even when it polls faster than
+training publishes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+__all__ = ["Candidate", "CheckpointWatcher"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One committed checkpoint boundary, restored and ready to score.
+
+    ``params`` is what the promotion gate scores and the engine swaps in;
+    ``state`` is the full restored carry (``fed.state.TrainState`` for the
+    zoo stack) for provenance/debugging."""
+
+    step: int
+    params: Any
+    state: Any = None
+
+
+class CheckpointWatcher:
+    """Follow a manager directory; yield each new committed step once.
+
+    Parameters
+    ----------
+    manager:
+        A ``CheckpointManager`` opened on the training run's directory with
+        the run's config fingerprint (restore refuses a foreign run).
+    template:
+        The restore template — ``repro.api.restore_template(spec)``'s fresh
+        round-0 ``TrainState`` for zoo runs.
+    extract:
+        Restored state -> swap payload; default takes ``.params`` (falling
+        back to the state itself for plain-dict checkpoints).
+    """
+
+    def __init__(self, manager, template, *, extract: Callable | None = None):
+        self.manager = manager
+        self.template = template
+        self.extract = extract or (lambda s: getattr(s, "params", s))
+        self.seen_step = 0  # committed steps are rounds-done, always >= 1
+
+    def poll(self) -> Candidate | None:
+        """The newest committed step beyond ``seen_step``, or None.
+
+        Intermediate steps the trainer published while we weren't looking
+        are skipped, not queued: serving always converges on the newest
+        committed boundary (the gate scores what would actually be served)."""
+        step = self.manager.latest()
+        if step is None or int(step) <= self.seen_step:
+            return None
+        state = self.manager.restore(self.template, int(step))
+        self.seen_step = int(step)
+        return Candidate(step=int(step), params=self.extract(state), state=state)
+
+    def wait(self, timeout: float) -> Candidate | None:
+        """Block (bounded) for a step beyond ``seen_step``; restore it.
+
+        Built on ``CheckpointManager.wait_for_next`` — the atomic-manifest
+        read semantics mean the returned candidate's files are guaranteed
+        complete."""
+        step = self.manager.wait_for_next(self.seen_step, timeout)
+        if step is None:
+            return None
+        return self.poll()

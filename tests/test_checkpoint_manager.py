@@ -149,6 +149,61 @@ def test_manager_manifest_is_commit_point(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# wait_for_next: the blocking read side of the train-to-serve hand-off
+# ---------------------------------------------------------------------------
+
+
+def test_wait_for_next_returns_newly_committed_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ck"))
+    assert mgr.wait_for_next(0, timeout=0.05) is None  # nothing ever committed
+    mgr.save(_state(1.0), step=2)
+    assert mgr.wait_for_next(0, timeout=0.05) == 2
+    # already-seen steps don't satisfy the wait
+    assert mgr.wait_for_next(2, timeout=0.05) is None
+    # timeout=0 is the non-blocking one-shot check
+    assert mgr.wait_for_next(0, timeout=0.0) == 2
+    assert mgr.wait_for_next(2, timeout=0.0) is None
+
+
+def test_wait_for_next_against_concurrent_writer(tmp_path):
+    """A reader polling ``wait_for_next`` while a writer thread publishes
+    boundaries must see a strictly increasing step sequence and restore
+    complete state at EVERY step it observes — the atomic-manifest commit
+    point means a torn step is never visible, only a possibly-stale one."""
+    import threading
+
+    path = str(tmp_path / "ck")
+    steps = [2, 4, 6, 8, 10]
+    writer_mgr = CheckpointManager(path, keep_last=len(steps))
+
+    def writer():
+        import time
+
+        for s in steps:
+            writer_mgr.save(_state(float(s)), step=s)
+            time.sleep(0.02)
+
+    reader_mgr = CheckpointManager(path)
+    t = threading.Thread(target=writer)
+    t.start()
+    seen = []
+    after = 0
+    while after < steps[-1]:
+        step = reader_mgr.wait_for_next(after, timeout=5.0, poll_interval=0.005)
+        assert step is not None, f"writer stalled after {seen}"
+        assert step > after  # monotone: never a stale or repeated boundary
+        got = reader_mgr.restore(_state(), step=step)
+        np.testing.assert_array_equal(  # never torn: value matches its step
+            np.asarray(got["w"]), np.full((4,), float(step))
+        )
+        seen.append(step)
+        after = step
+    t.join()
+    assert seen[-1] == steps[-1]
+    assert set(seen) <= set(steps)
+
+
+# ---------------------------------------------------------------------------
 # Sampler serializable-state contract: full registry round-trip sweep
 # ---------------------------------------------------------------------------
 
